@@ -1,0 +1,38 @@
+"""Paper Fig. 4 / Alg. 1: heterogeneous hybrid synchronization.
+
+Measures the QQ-tier barrier (clock probe -> alignment -> compensation ->
+verify) across MonitorProcesses: latency and post-compensation residual.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.runtime import LocalCluster
+
+NODE_COUNTS = [2, 4, 8]
+REPS = 5
+
+
+def run() -> list[dict]:
+    rows = []
+    for n in NODE_COUNTS:
+        with LocalCluster(n, clock_seed=11, skew_scale_ns=500.0) as cluster:
+            ctl = cluster.controller
+            ctl.mpiq_barrier_qq()         # warm sockets
+            lat, resid = [], []
+            for _ in range(REPS):
+                t0 = time.perf_counter()
+                res = ctl.mpiq_barrier_qq()
+                lat.append(time.perf_counter() - t0)
+                resid.append(res.residual_ns)
+                assert res.within_tolerance
+            rows.append({
+                "n_nodes": n,
+                "barrier_ms": float(np.median(lat) * 1e3),
+                "residual_ns": float(np.max(resid)),
+            })
+            print(f"  nodes={n}: barrier {rows[-1]['barrier_ms']:.2f} ms, "
+                  f"max residual {rows[-1]['residual_ns']:.1f} ns", flush=True)
+    return rows

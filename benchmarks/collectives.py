@@ -1,0 +1,65 @@
+"""MPIQ collective micro-benchmark (mesh tier, paper §4 operators).
+
+Times mpiq_bcast / scatter / gather / allgather / barrier on an 8-device
+host mesh (subprocess).  CPU-emulated collectives: the numbers measure the
+framework dispatch + memcpy path, not ICI — useful for per-call overhead
+comparisons between operators, labeled as such.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+_SNIPPET = r"""
+import time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+import repro.core as core
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+N = 1 << 18
+x4 = jax.device_put(jnp.arange(4 * N, dtype=jnp.float32).reshape(4, N),
+                    NamedSharding(mesh, P('model')))
+buf = jnp.arange(8 * N, dtype=jnp.float32).reshape(8, N)
+sq = jnp.arange(4, dtype=jnp.int32)
+x8 = jax.device_put(jnp.arange(8 * N // 4, dtype=jnp.float32).reshape(8, N // 4),
+                    NamedSharding(mesh, P(('data', 'model'))))
+skew = jax.device_put(jnp.zeros(4, jnp.float32), NamedSharding(mesh, P('model')))
+
+def bench(name, fn, reps=20):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    dt = (time.perf_counter() - t0) / reps
+    print(f"RESULT {name} {dt*1e6:.1f}")
+
+bench('mpiq_bcast', lambda: core.mpiq_bcast(x4, mesh, 'model'))
+bench('mpiq_scatter', lambda: core.mpiq_scatter(buf, sq, mesh, 'model'))
+bench('mpiq_gather', lambda: core.mpiq_gather(x4, mesh, 'model'))
+bench('mpiq_allgather', lambda: core.mpiq_allgather(x8, mesh, 'model', 'data'))
+bench('mpiq_barrier_cc', lambda: core.mpiq_barrier(
+    core.CC, mesh=mesh, classical_axes=('data', 'model')))
+bench('mpiq_barrier_qq', lambda: core.mpiq_barrier(
+    core.QQ, mesh=mesh, quantum_axis='model', skew_ns=skew)[0])
+"""
+
+
+def run() -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SNIPPET],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    out = {}
+    for m in re.finditer(r"RESULT (\S+) ([\d.]+)", proc.stdout):
+        out[m.group(1)] = float(m.group(2))
+        print(f"  {m.group(1):18s} {m.group(2):>10s} us/call")
+    if not out:
+        print("  collective bench failed:", proc.stderr[-500:])
+    return out

@@ -1,0 +1,92 @@
+"""Distributed statevector on the production mesh (the "one big register"
+regime of §3.2: a single n-qubit state sharded across all 256 chips; gates
+on device qubits lower to collective-permutes over ICI).
+
+Dry-run analysis (subprocess, 512 forced devices): lowers a GHZ ladder on a
+30-qubit register over the (16,16) mesh and reports the collective schedule
++ per-device bytes — the quantum-side counterpart of the LM roofline.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, jax.numpy as jnp
+from repro.quantum import distributed as dq, ghz
+from repro.launch.hloanalysis import analyze_hlo
+
+N = 30
+mesh = jax.make_mesh((256,), (dq.AXIS,),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+tape = ghz.build_ghz_tape(N)
+k = dq.n_device_qubits(mesh)
+n_local = N - k
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+def apply(psi):
+    return dq.dist_apply_tape.__wrapped__(psi, tape, mesh) if hasattr(
+        dq.dist_apply_tape, '__wrapped__') else dq.dist_apply_tape(
+        psi, tape, mesh)
+
+# lower only (compile) — no allocation of the 16 GiB state
+psi_struct = jax.ShapeDtypeStruct((2**N,), jnp.complex64)
+import functools
+from repro.quantum.tape import Tape
+
+def fn(psi):
+    return dq.dist_apply_tape(psi, tape, mesh)
+
+# dist_apply_tape jits internally; build the lowered module explicitly
+from repro.quantum import gates as G
+ops = []
+for i in range(tape.length):
+    op = int(tape.opcodes[i])
+    if op == G.NOP:
+        continue
+    mat = G.gate_matrix_np(op, float(tape.params[i]))
+    ctrl = int(tape.ctrls[i]) if G.is_controlled(op) else -1
+    ops.append((jnp.asarray(mat), int(tape.qubits[i]), ctrl))
+
+def body(x):
+    for mat, tgt, ctl in ops:
+        x = dq._apply_one(x, mat, tgt, ctl, n_local, 256, dq.AXIS)
+    return x
+
+shm = jax.shard_map(body, mesh=mesh, in_specs=P(dq.AXIS), out_specs=P(dq.AXIS))
+lowered = jax.jit(shm).lower(psi_struct)
+compiled = lowered.compile()
+ma = compiled.memory_analysis()
+s = analyze_hlo(compiled.as_text())
+state_gib = 2**N * 8 / 2**30
+print(f"RESULT qubits {N}")
+print(f"RESULT state_gib {state_gib:.1f}")
+print(f"RESULT bytes_per_device_mib {(ma.argument_size_in_bytes)/2**20:.1f}")
+print(f"RESULT collective_mib_per_device {s.total_collective_bytes/2**20:.2f}")
+print(f"RESULT collective_kinds {','.join(s.collective_bytes)}")
+print(f"RESULT hbm_mib_per_device {s.hbm_bytes/2**20:.1f}")
+print(f"RESULT t_mem_us {s.hbm_bytes/819e9*1e6:.1f}")
+print(f"RESULT t_coll_us {s.total_collective_bytes/150e9*1e6:.1f}")
+"""
+
+
+def run() -> dict:
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SNIPPET],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    out = {}
+    for m in re.finditer(r"RESULT (\S+) (\S+)", proc.stdout):
+        out[m.group(1)] = m.group(2)
+        print(f"  {m.group(1):28s} {m.group(2)}")
+    if not out:
+        print("  dist statevector bench failed:", proc.stderr[-400:])
+    return out

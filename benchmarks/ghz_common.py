@@ -1,0 +1,83 @@
+"""Shared harness for the GHZ distributed-computing benchmarks (paper §6).
+
+The paper's cluster had 32 physical cores (1 controller + up to 24 quantum
+nodes); this container has ONE core, so a concurrent wave's wall clock
+cannot show real speedup here (processes time-slice one core), and node-side
+timings taken under contention are inflated.  Methodology:
+
+  1. *Sequential pass* (clean measurements): every sub-circuit is dispatched
+     one-at-a-time; per-task node execution time (exec_i) and communication
+     overhead (comm_i = round-trip - exec) are contention-free.
+     serial_s = sum_i (exec_i + comm_i)   — the paper's T_serial.
+  2. *Critical-path parallel time*: tasks round-robin onto n nodes exactly
+     as the controller schedules them; with >= n physical cores the wave
+     finishes when the slowest node drains:
+     parallel_cp_s = max_j sum_{i on j} (exec_i + comm_i)  — T_parallel.
+  3. *Concurrent wave* (honest wall clock on this 1-core host, plus the
+     correctness check): reported as parallel_wall_s with the caveat.
+
+  speedup = serial_s / parallel_cp_s  — the paper's S.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+
+import numpy as np
+
+from repro.quantum import cutting
+from repro.runtime import LocalCluster
+
+
+def measure_config(n_qubits: int, n_nodes: int, shots: int = 64,
+                   cluster: LocalCluster | None = None) -> dict:
+    """One (total-qubits, nodes) cell of Tables 2/3."""
+    plan = cutting.cut_ghz_parallel(n_qubits, n_nodes)
+    own_cluster = cluster is None
+    if own_cluster:
+        cluster = LocalCluster(n_nodes, clock_seed=5)
+        cluster.__enter__()
+    try:
+        ctl = cluster.controller
+        nodes = ctl.alive_qranks()[:n_nodes]
+        # warm the (tape shape, shots) pair on every node — compile-once
+        # waveform property: the measured waves must never retrace
+        for q in nodes:
+            ctl.mpiq_send(q, plan.tapes[0], shots, tag=900 + q)
+
+        # 1. sequential pass: clean per-task exec/comm on node 0
+        exec_s, comm_s = [], []
+        for i, tape in enumerate(plan.tapes):
+            r = ctl.mpiq_send(nodes[0], tape, shots, tag=i)
+            exec_s.append(r.exec_ns / 1e9)
+            comm_s.append(max(r.wall_ns - r.exec_ns, 0) / 1e9)
+        serial_s = float(sum(exec_s) + sum(comm_s))
+
+        # 2. critical path under round-robin placement
+        per_node = defaultdict(float)
+        for i in range(len(plan.tapes)):
+            per_node[i % n_nodes] += exec_s[i] + comm_s[i]
+        parallel_cp = float(max(per_node.values()))
+
+        # 3. true concurrent wave (wall clock + correctness)
+        t0 = time.perf_counter()
+        results = ctl.run_tasks(plan.tapes, shots=shots)
+        wall = time.perf_counter() - t0
+        glob = cutting.reconstruct_ghz_samples(
+            plan, [r.samples for r in results])
+        assert set(np.unique(glob)) <= {0, 2**n_qubits - 1}
+
+        return {
+            "n_qubits": n_qubits,
+            "n_nodes": n_nodes,
+            "subcircuit_qubits": max(plan.group_sizes),
+            "serial_s": serial_s,
+            "parallel_cp_s": parallel_cp,
+            "parallel_wall_s": wall,
+            "comm_s": float(np.mean(comm_s)),
+            "speedup": serial_s / parallel_cp,
+            "branch_frac": float((glob != 0).mean()),
+        }
+    finally:
+        if own_cluster:
+            cluster.__exit__(None, None, None)

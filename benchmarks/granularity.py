@@ -1,0 +1,33 @@
+"""Paper Table 2 / Fig. 8: cutting-granularity adaptability.
+
+Fixed node count, growing GHZ size => growing sub-circuit granularity.
+Expected trend (paper): comm-bound at small granularity (flat speedup),
+compute-bound at large granularity (speedup approaching n_nodes), plateau.
+
+Scaled to this container (see ghz_common docstring): 4 quantum nodes,
+sub-circuits 4..20 qubits (the paper used 10 nodes, 4..25 qubits — same
+regime boundaries, smaller absolute sizes for the 1-core host).
+"""
+from __future__ import annotations
+
+from repro.runtime import LocalCluster
+
+from .ghz_common import measure_config
+
+N_NODES = 4
+SUB_SIZES = [4, 8, 12, 14, 16, 18, 20]
+
+
+def run(shots: int = 64) -> list[dict]:
+    rows = []
+    with LocalCluster(N_NODES, clock_seed=5) as cluster:
+        for sub in SUB_SIZES:
+            rec = measure_config(sub * N_NODES, N_NODES, shots=shots,
+                                 cluster=cluster)
+            rows.append(rec)
+            print(f"  ghz={rec['n_qubits']:4d}q sub={sub:2d}q "
+                  f"serial={rec['serial_s']:.3f}s "
+                  f"cp={rec['parallel_cp_s']:.3f}s "
+                  f"speedup={rec['speedup']:.2f}x "
+                  f"(wall-1core={rec['parallel_wall_s']:.3f}s)", flush=True)
+    return rows

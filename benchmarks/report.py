@@ -1,0 +1,57 @@
+"""Render the dry-run JSON artifacts into the EXPERIMENTS.md roofline
+tables (markdown)."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def _fmt(r):
+    if "skip" in r:
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | — | {r['skip'].split(':')[0]} |"
+    t = r["roofline"]
+    m = r["memory"]["peak_per_device"] / 2**30
+    dom_t = max(t["t_compute_s"], t["t_memory_s"], t["t_collective_s"])
+    return ("| {arch} | {shape} | {c:.3f} | {mem:.3f} | {coll:.3f} | "
+            "{dom} | {frac:.2f} | {gib:.1f} GiB |").format(
+        arch=r["arch"], shape=r["shape"], c=t["t_compute_s"],
+        mem=t["t_memory_s"], coll=t["t_collective_s"], dom=t["dominant"],
+        frac=t["roofline_fraction"], gib=m)
+
+
+def table(path: str) -> str:
+    if not os.path.exists(path):
+        return f"*({path} not generated yet)*"
+    recs = json.load(open(path))
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    head = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dom | "
+            "frac | mem/dev |\n|---|---|---|---|---|---|---|---|")
+    rows = [_fmt(r) for r in recs if "error" not in r]
+    return head + "\n" + "\n".join(rows)
+
+
+def flash_table(path: str) -> str:
+    """Optimized view: flash-kernel-adjusted memory term."""
+    if not os.path.exists(path):
+        return f"*({path} not generated yet)*"
+    recs = [r for r in json.load(open(path)) if "roofline" in r]
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    head = ("| arch | shape | t_comp | t_mem(flash) | t_coll | est. step "
+            "bound | frac |\n|---|---|---|---|---|---|---|")
+    rows = []
+    for r in recs:
+        t = r["roofline"]
+        tmf = t.get("t_memory_flash_s", t["t_memory_s"])
+        bound = max(t["t_compute_s"], tmf, t["t_collective_s"])
+        frac = t["t_compute_s"] / bound if bound else 0.0
+        rows.append(f"| {r['arch']} | {r['shape']} | {t['t_compute_s']:.3f} "
+                    f"| {tmf:.3f} | {t['t_collective_s']:.3f} | {bound:.3f} "
+                    f"| {frac:.2f} |")
+    return head + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single.json"
+    mode = sys.argv[2] if len(sys.argv) > 2 else "base"
+    print(table(which) if mode == "base" else flash_table(which))

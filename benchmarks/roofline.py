@@ -1,0 +1,53 @@
+"""Roofline table from the dry-run artifacts (assignment §Roofline).
+
+Reads results/dryrun_*.json (produced by repro.launch.dryrun) and prints,
+per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPS usefulness ratio, and bytes/device.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = ["results/dryrun_single.json", "results/dryrun_multi.json"]
+
+
+def load_records(paths=None) -> list[dict]:
+    out = []
+    for p in paths or RESULTS:
+        if os.path.exists(p):
+            with open(p) as f:
+                out.extend(json.load(f))
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    if "skip" in r:
+        return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                f"{r['skip']}")
+    if "error" in r:
+        return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                f"ERROR: {r['error'][:60]}")
+    t = r["roofline"]
+    m = r["memory"]["peak_per_device"] / 2**30
+    return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"comp={t['t_compute_s']:.4f}s mem={t['t_memory_s']:.4f}s "
+            f"coll={t['t_collective_s']:.4f}s dom={t['dominant']:10s} "
+            f"useful={t['useful_flops_ratio']:.2f} "
+            f"roofline_frac={t['roofline_fraction']:.2f} "
+            f"GiB/dev={m:.1f}")
+
+
+def run() -> list[dict]:
+    recs = load_records()
+    if not recs:
+        print("  (no dry-run results found — run repro.launch.dryrun first)")
+        return []
+    recs.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    for r in recs:
+        print("  " + fmt_row(r))
+    n_ok = sum(1 for r in recs if "roofline" in r)
+    n_skip = sum(1 for r in recs if "skip" in r)
+    n_err = sum(1 for r in recs if "error" in r)
+    print(f"  == {n_ok} compiled, {n_skip} documented skips, {n_err} errors")
+    return recs

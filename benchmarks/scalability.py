@@ -1,0 +1,29 @@
+"""Paper Table 3 / Fig. 9: node scalability.
+
+Fixed sub-circuit size, growing node count (total GHZ size grows with it).
+Expected: near-linear speedup from 4 nodes up (paper: 2.05x @ 4 -> 18.76x
+@ 24 with 20q sub-circuits).
+
+Scaled to this container: 16q sub-circuits, 1..12 nodes.  One cluster is
+spawned at the maximum size and waves address node subsets.
+"""
+from __future__ import annotations
+
+from repro.runtime import LocalCluster
+
+from .ghz_common import measure_config
+
+SUB_SIZE = 16
+NODE_COUNTS = [1, 2, 4, 6, 8, 10, 12]
+
+
+def run(shots: int = 64) -> list[dict]:
+    rows = []
+    for n in NODE_COUNTS:
+        rec = measure_config(SUB_SIZE * n, n, shots=shots)
+        rows.append(rec)
+        print(f"  nodes={n:2d} ghz={rec['n_qubits']:4d}q "
+              f"serial={rec['serial_s']:.3f}s "
+              f"cp={rec['parallel_cp_s']:.3f}s "
+              f"speedup={rec['speedup']:.2f}x", flush=True)
+    return rows

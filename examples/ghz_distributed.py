@@ -1,0 +1,55 @@
+"""Distributed GHZ with fault tolerance: the paper's case study (§5) under
+adverse conditions — a straggler node and a mid-run node failure.
+
+Run:  PYTHONPATH=src python examples/ghz_distributed.py
+"""
+import numpy as np
+
+from repro.quantum import cutting
+from repro.runtime import LocalCluster
+
+N_QUBITS = 48
+N_NODES = 4
+
+
+def main():
+    # node 3 runs 20x slower than its peers (straggler injection)
+    with LocalCluster(N_NODES, clock_seed=9,
+                      slowdowns={3: 20.0}) as cluster:
+        ctl = cluster.controller
+        plan = cutting.cut_ghz_parallel(N_QUBITS, N_NODES)
+        ctl.run_tasks(plan.tapes, shots=8)      # warm compile caches
+
+        print("wave 1: with straggler mitigation "
+              "(duplicate-dispatch, first result wins)")
+        results = ctl.run_tasks(plan.tapes, shots=64,
+                                straggler_factor=2.0, min_deadline_s=0.5)
+        by_node = {}
+        for r in results:
+            by_node.setdefault(r.qrank, []).append(r.task_id)
+        print(f"  task placement after mitigation: {by_node}")
+
+        print("wave 2: node 1 is killed mid-experiment")
+        cluster.kill_node(1)
+        results = ctl.run_tasks(plan.tapes, shots=64)
+        assert all(r.qrank != 1 for r in results)
+        glob = cutting.reconstruct_ghz_samples(
+            plan, [r.samples for r in results])
+        assert set(np.unique(glob)) <= {0, 2**N_QUBITS - 1}
+        print(f"  completed on survivors {sorted({r.qrank for r in results})}"
+              f", reconstruction valid, branch frac "
+              f"{(glob != 0).mean():.2f}")
+
+        print("wave 3: ledger checkpoint/restart")
+        import tempfile
+        with tempfile.TemporaryDirectory() as td:
+            ctl.run_tasks(plan.tapes, shots=64, ledger_path=td)
+            import time
+            t0 = time.perf_counter()
+            ctl.run_tasks(plan.tapes, shots=64, ledger_path=td)
+            print(f"  restart replayed from ledger in "
+                  f"{time.perf_counter()-t0:.3f}s (no re-execution)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Batched serving example: prefill + KV-cache decode on a reduced model.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    serve_main(["--arch", "qwen2.5-3b", "--scale", "100m",
+                "--batch", "4", "--prompt-len", "16", "--gen", "32"])

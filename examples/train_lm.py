@@ -1,0 +1,23 @@
+"""End-to-end training example: a ~100M-parameter qwen-family model for a
+few hundred steps on the synthetic pipeline, with checkpoint/resume.
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+(takes a few minutes on CPU; pass --steps 50 for a quick look)
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    a = ap.parse_args()
+    train_main([
+        "--arch", "qwen2.5-3b", "--scale", "100m",
+        "--steps", str(a.steps), "--batch", "4", "--seq", "512",
+        "--ckpt-dir", a.ckpt_dir, "--ckpt-every", "50",
+        "--log-every", "10",
+    ])

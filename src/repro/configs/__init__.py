@@ -1,0 +1,45 @@
+"""Architecture registry: the 10 assigned configs + the GHZ case study.
+
+`get_config(name)` returns the exact pool config; `get_rule_overrides(name)`
+returns per-arch logical->physical sharding adjustments (e.g. grok-1's
+8 experts cannot shard 16-way, so its EP shards the expert FFN dim).
+"""
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig
+
+ARCHS = {
+    "qwen2.5-14b": "qwen2_5_14b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "llama3-405b": "llama3_405b",
+    "internvl2-26b": "internvl2_26b",
+    "mamba2-780m": "mamba2_780m",
+    "grok-1-314b": "grok_1_314b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "whisper-tiny": "whisper_tiny",
+}
+
+# archs with a sub-quadratic sequence path (long_500k eligible)
+SUBQUADRATIC = {"mamba2-780m", "jamba-1.5-large-398b"}
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+def _module(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choices: {list(ARCHS)}")
+    return importlib.import_module(f".{ARCHS[name]}", __package__)
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_rule_overrides(name: str) -> dict:
+    return getattr(_module(name), "RULE_OVERRIDES", {})

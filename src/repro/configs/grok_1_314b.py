@@ -1,0 +1,15 @@
+"""grok-1-314b [moe] — 8 experts top-2 [hf:xai-org/grok-1].
+
+8 experts < tp=16, so EP shards the expert FFN dim instead of the expert
+dim (rules override)."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=32768, vocab_size=131072,
+    n_experts=8, experts_per_token=2,
+    optimizer="adafactor",
+)
+
+RULE_OVERRIDES = {"experts": None, "expert_mlp": "model"}

@@ -1,0 +1,12 @@
+"""internvl2-26b [vlm] — InternViT stub frontend + InternLM2 backbone
+[arXiv:2404.16821].  The backbone (48L/6144/48H kv8) is fully built; the
+vision tower is a stub supplying precomputed patch embeddings."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab_size=92553, rope_theta=1_000_000.0,
+    n_patches=256,
+    optimizer="adamw",
+)

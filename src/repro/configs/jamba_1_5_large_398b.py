@@ -1,0 +1,13 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e
+top-2 [arXiv:2403.19887].  72 layers = 9 super-blocks of 8 (1 attention +
+7 Mamba-2); MoE FFN every 2nd layer."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=24576, vocab_size=65536,
+    n_experts=16, experts_per_token=2, moe_every=2, attn_every=8,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_conv=4,
+    optimizer="adafactor",
+)

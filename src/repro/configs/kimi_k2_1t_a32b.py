@@ -1,0 +1,12 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, 384 experts top-8
+[arXiv:2501.kimi2].  Expert hidden dim 2048 (d_ff field of the pool entry
+is the expert dim); q_dim = 64 heads x 128 = 8192 != d_model."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=2048, vocab_size=163840,
+    n_experts=384, experts_per_token=8,
+    optimizer="adafactor",
+)

@@ -1,0 +1,11 @@
+"""whisper-tiny [audio] — encoder-decoder, conv frontend stub
+[arXiv:2212.04356].  input_specs supplies precomputed frame embeddings."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6, head_dim=64,
+    d_ff=1536, vocab_size=51865, qkv_bias=True,
+    n_enc_layers=4, enc_frames=1500,
+    optimizer="adamw",
+)

@@ -1,0 +1,20 @@
+"""MPI-Q core: the paper's primary contribution.
+
+  domain.py      — heterogeneous hybrid communication domain (§3.1)
+  collectives.py — MPIQ_* communication operations on a JAX mesh (§4)
+  sync.py        — heterogeneous hybrid synchronization / MPIQ_Barrier (§3.3)
+
+The socket-runtime realization of the same verbs lives in repro.runtime.
+"""
+from .domain import (ClassicalResource, DeviceBinding, FixedMapper,
+                     HybridCommDomain, MappingError, RandomAdaptiveMapper)
+from .sync import CC, QQ, BarrierResult, ClockModel, align_clocks, mpiq_barrier
+from .collectives import (mpiq_allgather, mpiq_bcast, mpiq_gather,
+                          mpiq_scatter, mpiq_send_specs)
+
+__all__ = [
+    "ClassicalResource", "DeviceBinding", "FixedMapper", "HybridCommDomain",
+    "MappingError", "RandomAdaptiveMapper", "CC", "QQ", "BarrierResult",
+    "ClockModel", "align_clocks", "mpiq_barrier", "mpiq_allgather",
+    "mpiq_bcast", "mpiq_gather", "mpiq_scatter", "mpiq_send_specs",
+]

@@ -1,0 +1,108 @@
+"""MPI-Q communication operations on a JAX mesh (paper §4, Fig. 5).
+
+SPMD realizations of the MPIQ_* operators.  The socket runtime implements the
+same verbs over TCP (runtime/); this module is the TPU tier, where
+inter-node messaging lowers to ICI/DCN collectives:
+
+  MPIQ_Bcast     -> masked psum from the root coordinate (one-to-all)
+  MPIQ_Scatter   -> send_q-indexed slice per coordinate (one-to-each)
+  MPIQ_Gather    -> all_gather over the quantum axis (all-to-root; SPMD
+                    leaves the result replicated, the root "view" is free)
+  MPIQ_Allgather -> two-tier Collect+Distribute: gather over the quantum
+                    axis, then all_gather over the classical axis — exactly
+                    the paper's "master gathers, classical MPI_Allgather
+                    distributes" schedule
+  MPIQ_Barrier   -> core.sync.mpiq_barrier
+
+All operators take explicit mesh axes so the same code serves the single-pod
+("data","model") and multi-pod ("pod","data","model") production meshes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def mpiq_bcast(x, mesh, axis: str, root: int = 0):
+    """Broadcast root's shard to every coordinate of `axis`.
+
+    Input is sharded over `axis` (each coordinate holds its own candidate
+    buffer); output is every coordinate holding root's buffer.  Used to ship
+    one waveform tape to all quantum MonitorProcesses (e.g. identical GHZ
+    sub-circuits)."""
+    def body(x_local):
+        idx = jax.lax.axis_index(axis)
+        contrib = jnp.where(idx == root, x_local, jnp.zeros_like(x_local))
+        return jax.lax.psum(contrib, axis)
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P())
+    return jax.jit(fn)(x)
+
+
+def mpiq_scatter(x, send_q, mesh, axis: str):
+    """Scatter rows of `x` to coordinates of `axis` following the paper's
+    `send_q` mapping array: coordinate i receives x[send_q[i]].
+
+    x: [n_items, ...] root buffer (logically replicated in SPMD — XLA
+    materializes the actual one-to-each transfer); send_q: int32[axis_size].
+    """
+    send_q = jnp.asarray(send_q, jnp.int32)
+
+    def body(x_full, q_map):
+        idx = jax.lax.axis_index(axis)
+        row = jnp.take(q_map, idx)
+        return jnp.take(x_full, row, axis=0)[None]
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                       out_specs=P(axis))
+    return jax.jit(fn)(x, send_q)
+
+
+def mpiq_gather(x, mesh, axis: str):
+    """Gather shards over `axis` into the root's buffer ([n, ...] stacked
+    in coordinate order).  SPMD all-gather: the root view is x itself."""
+    def body(x_local):
+        return jax.lax.all_gather(x_local, axis, axis=0, tiled=False)
+
+    # all_gather output is replicated over `axis` but VMA inference cannot
+    # prove it; the collective guarantees it.
+    fn = jax.shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P(),
+                       check_vma=False)
+    return jax.jit(fn)(x)
+
+
+def mpiq_allgather(x, mesh, quantum_axis: str, classical_axis: str):
+    """Two-tier Collect + Distribute (paper §4.3, Fig. 5e).
+
+    Tier 1: the master classical coordinate gathers all quantum shards
+    (all_gather over `quantum_axis`).  Tier 2: the aggregate is distributed
+    to all classical coordinates (all_gather over `classical_axis`) — each
+    classical coordinate contributed a distinct sub-batch, so the result is
+    the full [classical, quantum, ...] tensor everywhere."""
+    def body(x_local):
+        q_all = jax.lax.all_gather(x_local, quantum_axis, axis=0, tiled=False)
+        return jax.lax.all_gather(q_all, classical_axis, axis=0, tiled=False)
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=P((classical_axis, quantum_axis)),
+                       out_specs=P(), check_vma=False)
+    # input is sharded jointly over both axes on dim 0
+    return jax.jit(fn)(x)
+
+
+def mpiq_send_specs(mesh, axis: str):
+    """Point-to-point MPIQ_Send/Recv on an SPMD mesh degenerates to a
+    sharding constraint: data produced at the classical coordinate and
+    consumed at a *fixed* quantum coordinate is expressed as a ppermute.
+    Returns a helper performing send(src->dst) over `axis`."""
+    def send(x, src: int, dst: int):
+        def body(x_local):
+            perm = [(src, dst)]
+            return jax.lax.ppermute(x_local, axis, perm)
+
+        fn = jax.shard_map(body, mesh=mesh, in_specs=P(axis),
+                           out_specs=P(axis))
+        return jax.jit(fn)(x)
+
+    return send

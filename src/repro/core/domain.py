@@ -1,0 +1,196 @@
+"""Heterogeneous hybrid communication domain (paper §3.1).
+
+A domain is the triple {process group, communication context, virtual
+processor topology}:
+
+  * process group — classical processes identified by `rank`, quantum
+    processes identified by `qrank`;
+  * communication context — an isolation tag namespacing every message so
+    concurrent domains cannot cross-talk (MPI communicator semantics);
+  * virtual processor topology — logical stand-ins for physical resources:
+    classical VPs map to hardware by *random-adaptive* allocation (flexible
+    scheduling), quantum VPs by *strict fixed* binding to an
+    `{IP, device_id}` tuple (quantum tasks are hardware-bound).
+
+The same object serves both runtimes: the socket runtime reads bindings as
+TCP endpoints; the JAX runtime (`attach_mesh`) reads classical VPs as mesh
+coordinates and quantum VPs as fixed `jax.Device` assignments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random
+from typing import Callable, Sequence
+
+_context_counter = itertools.count(1)
+
+
+def _fresh_context() -> int:
+    """Allocate a fresh communication-context tag (never reused in-process)."""
+    return next(_context_counter)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceBinding:
+    """The paper's `{IP, device_id}` unique hardware identifier."""
+    ip: str
+    device_id: int
+
+    def key(self) -> tuple[str, int]:
+        return (self.ip, self.device_id)
+
+
+@dataclasses.dataclass
+class ClassicalResource:
+    """A classical execution slot (CPU/GPU host) with capacity accounting,
+    target of the random-adaptive mapper."""
+    name: str
+    capacity: int = 1
+    load: int = 0
+
+    def available(self) -> bool:
+        return self.load < self.capacity
+
+
+class MappingError(RuntimeError):
+    pass
+
+
+class RandomAdaptiveMapper:
+    """Paper §3.1 classical mapping: randomly pick a candidate, verify its
+    load/performance admits the task, else iterate until a slot is found."""
+
+    def __init__(self, resources: Sequence[ClassicalResource], seed: int = 0,
+                 admit: Callable[[ClassicalResource], bool] | None = None):
+        self.resources = list(resources)
+        self._rng = random.Random(seed)
+        self._admit = admit or (lambda r: r.available())
+
+    def map_one(self) -> ClassicalResource:
+        order = list(range(len(self.resources)))
+        self._rng.shuffle(order)
+        for i in order:
+            r = self.resources[i]
+            if self._admit(r):
+                r.load += 1
+                return r
+        raise MappingError("no classical resource admits the task")
+
+    def release(self, r: ClassicalResource) -> None:
+        r.load = max(0, r.load - 1)
+
+
+class FixedMapper:
+    """Paper §3.1 quantum mapping: static, exclusive binding of each quantum
+    virtual processor to one `{IP, device_id}`; double-binding is an error."""
+
+    def __init__(self, bindings: Sequence[DeviceBinding]):
+        seen: set[tuple[str, int]] = set()
+        for b in bindings:
+            if b.key() in seen:
+                raise MappingError(f"device {b.key()} bound twice")
+            seen.add(b.key())
+        self.bindings = list(bindings)
+
+    def binding_of(self, qvp: int) -> DeviceBinding:
+        if not (0 <= qvp < len(self.bindings)):
+            raise MappingError(f"quantum VP {qvp} has no fixed binding")
+        return self.bindings[qvp]
+
+
+@dataclasses.dataclass
+class HybridCommDomain:
+    """Unified classical+quantum communicator."""
+    context_id: int
+    n_classical: int
+    quantum_bindings: tuple[DeviceBinding, ...]
+    classical_resources: tuple[ClassicalResource, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        self._fixed = FixedMapper(self.quantum_bindings)
+        res = self.classical_resources or tuple(
+            ClassicalResource(f"cvp{i}") for i in range(self.n_classical))
+        self._adaptive = RandomAdaptiveMapper(res, seed=self.seed)
+        self._mesh = None
+        self._q_devices: list = []
+
+    # --- construction -------------------------------------------------------
+    @staticmethod
+    def create(n_classical: int, quantum_bindings: Sequence[DeviceBinding],
+               seed: int = 0, **kw) -> "HybridCommDomain":
+        return HybridCommDomain(
+            context_id=_fresh_context(),
+            n_classical=n_classical,
+            quantum_bindings=tuple(quantum_bindings),
+            seed=seed, **kw)
+
+    # --- process group ------------------------------------------------------
+    @property
+    def n_quantum(self) -> int:
+        return len(self.quantum_bindings)
+
+    def ranks(self) -> range:
+        return range(self.n_classical)
+
+    def qranks(self) -> range:
+        return range(self.n_quantum)
+
+    def qrank_to_binding(self, qrank: int) -> DeviceBinding:
+        return self._fixed.binding_of(qrank)
+
+    def binding_to_qrank(self, ip: str, device_id: int) -> int:
+        for q, b in enumerate(self.quantum_bindings):
+            if b.key() == (ip, device_id):
+                return q
+        raise MappingError(f"no qrank bound to ({ip},{device_id})")
+
+    def map_classical_task(self) -> ClassicalResource:
+        return self._adaptive.map_one()
+
+    def release_classical(self, r: ClassicalResource) -> None:
+        self._adaptive.release(r)
+
+    # --- split (MPI_Comm_split semantics, fresh context per color) ----------
+    def split(self, rank_colors: Sequence[int],
+              qrank_colors: Sequence[int]) -> dict[int, "HybridCommDomain"]:
+        if len(rank_colors) != self.n_classical:
+            raise ValueError("rank_colors length mismatch")
+        if len(qrank_colors) != self.n_quantum:
+            raise ValueError("qrank_colors length mismatch")
+        out: dict[int, HybridCommDomain] = {}
+        for color in sorted(set(rank_colors) | set(qrank_colors)):
+            nc = sum(1 for c in rank_colors if c == color)
+            qb = tuple(b for b, c in zip(self.quantum_bindings, qrank_colors)
+                       if c == color)
+            out[color] = HybridCommDomain(
+                context_id=_fresh_context(), n_classical=nc,
+                quantum_bindings=qb, seed=self.seed + color + 1)
+        return out
+
+    # --- JAX mesh attachment -------------------------------------------------
+    def attach_mesh(self, mesh, quantum_axis: str | None = None):
+        """Bind the domain to a jax Mesh.  Classical VPs cover the mesh;
+        quantum VPs get *fixed* device assignments taken along
+        `quantum_axis` (or the flat device list), one per qrank."""
+        import numpy as np
+        devs = list(np.asarray(mesh.devices).reshape(-1))
+        if self.n_quantum > len(devs):
+            raise MappingError(
+                f"{self.n_quantum} quantum VPs > {len(devs)} mesh devices")
+        self._mesh = mesh
+        # fixed binding: qrank i -> device i (deterministic, never remapped)
+        self._q_devices = devs[: self.n_quantum]
+        return self
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            raise RuntimeError("attach_mesh first")
+        return self._mesh
+
+    def qrank_device(self, qrank: int):
+        if not self._q_devices:
+            raise RuntimeError("attach_mesh first")
+        return self._q_devices[qrank]

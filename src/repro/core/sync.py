@@ -1,0 +1,125 @@
+"""Heterogeneous hybrid synchronization (paper §3.3, Algorithm 1).
+
+`MPIQ_Barrier(flag)` dispatches on the synchronization tier:
+
+  * CC (classical-classical) — reuses the native barrier.  In the JAX mesh
+    runtime a barrier is a 0-byte token all-reduce over the classical axes;
+    in the socket runtime it is the coordinator's barrier round.
+
+  * QQ (quantum-quantum) — socket signalling plus hardware-clock alignment.
+    Each quantum MonitorProcess owns a clock-skew register (measured against
+    the reference clock); the barrier all-reduce-maxes the skews, derives a
+    common trigger instant, and hands every node its *compensation delay* so
+    that physical gate triggering lands within the qubit-coherence tolerance.
+
+The clock hardware is modeled (skew + drift + measurement jitter registers);
+the alignment *mechanism* — measure, agree on a trigger, compensate, verify
+residual within tolerance — is implemented exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+CC = 0  # classical <-> classical
+QQ = 2  # quantum MonitorProcess <-> quantum MonitorProcess
+
+# v5e-class control electronics: sub-coherence-time trigger tolerance.
+DEFAULT_TOLERANCE_NS = 50.0
+DEFAULT_GUARD_NS = 100.0
+
+
+@dataclasses.dataclass
+class ClockModel:
+    """Per-node reference-clock register bank (simulated hardware)."""
+    skew_ns: np.ndarray    # current offset of each node clock vs reference
+    drift_ppb: np.ndarray  # drift rate, parts-per-billion
+
+    @staticmethod
+    def make(n_nodes: int, seed: int = 0, skew_scale_ns: float = 500.0,
+             drift_scale_ppb: float = 20.0) -> "ClockModel":
+        rng = np.random.default_rng(seed)
+        return ClockModel(
+            skew_ns=rng.normal(0.0, skew_scale_ns, n_nodes),
+            drift_ppb=rng.normal(0.0, drift_scale_ppb, n_nodes),
+        )
+
+    def advance(self, dt_s: float) -> None:
+        self.skew_ns += self.drift_ppb * 1e-9 * dt_s * 1e9
+
+    def measure(self, jitter_ns: float = 5.0, seed: int = 1) -> np.ndarray:
+        """Delay-measurement unit: skew estimate with measurement jitter."""
+        rng = np.random.default_rng(seed)
+        return self.skew_ns + rng.normal(0.0, jitter_ns, len(self.skew_ns))
+
+
+@dataclasses.dataclass(frozen=True)
+class BarrierResult:
+    trigger_ns: float          # agreed common trigger instant
+    compensation_ns: np.ndarray  # per-node delay to add before triggering
+    residual_ns: float         # worst-case post-compensation misalignment
+    within_tolerance: bool
+
+
+def align_clocks(measured_skew_ns: np.ndarray,
+                 guard_ns: float = DEFAULT_GUARD_NS,
+                 tolerance_ns: float = DEFAULT_TOLERANCE_NS,
+                 true_skew_ns: np.ndarray | None = None) -> BarrierResult:
+    """Host-side (socket-runtime) quantum barrier: agree on max-skew + guard
+    as the trigger instant; each node delays by (trigger - its skew)."""
+    skew = np.asarray(measured_skew_ns, dtype=np.float64)
+    trigger = float(skew.max()) + guard_ns
+    comp = trigger - skew
+    actual = (true_skew_ns if true_skew_ns is not None else skew) + comp
+    residual = float(np.abs(actual - trigger).max())
+    return BarrierResult(trigger, comp, residual, residual <= tolerance_ns)
+
+
+# --------------------------------------------------------------------------
+# in-mesh (SPMD) barrier tier
+# --------------------------------------------------------------------------
+
+def classical_barrier(mesh, axes: tuple[str, ...]):
+    """0-byte-payload token all-reduce over the classical mesh axes.  The
+    returned token must be threaded into downstream computation to order it
+    after the barrier."""
+    def body(tok):
+        for ax in axes:
+            tok = jax.lax.psum(tok, ax)
+        return tok
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P())
+    tok = jnp.zeros((), jnp.int32)
+    return jax.jit(fn)(tok)
+
+
+def quantum_barrier_mesh(skew_ns: jax.Array, mesh, axis: str,
+                         guard_ns: float = DEFAULT_GUARD_NS,
+                         tolerance_ns: float = DEFAULT_TOLERANCE_NS):
+    """SPMD quantum barrier: each mesh coordinate holds its MonitorProcess
+    clock skew; pmax agrees the trigger; returns (compensation, ok)."""
+    def body(skew):
+        trigger = jax.lax.pmax(jnp.max(skew), axis) + guard_ns
+        comp = trigger - skew
+        residual = jax.lax.pmax(jnp.max(jnp.abs(skew + comp - trigger)), axis)
+        return comp, residual <= tolerance_ns
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=P(axis),
+                       out_specs=(P(axis), P()))
+    return jax.jit(fn)(skew_ns)
+
+
+def mpiq_barrier(flag: int, *, mesh=None, classical_axes: tuple[str, ...] = (),
+                 quantum_axis: str | None = None, skew_ns=None, **kw):
+    """Algorithm 1.  flag==CC -> classical tier; flag==QQ -> quantum tier."""
+    if flag == CC:
+        return classical_barrier(mesh, classical_axes)
+    if flag == QQ:
+        if skew_ns is None or quantum_axis is None:
+            raise ValueError("QQ barrier needs skew registers and an axis")
+        return quantum_barrier_mesh(skew_ns, mesh, quantum_axis, **kw)
+    raise ValueError(f"unknown barrier flag {flag}")

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with ops.py as the jit'd public wrapper and ref.py as the pure-jnp
+oracle every kernel is validated against (interpret mode on CPU, compiled
+on real TPU; see tests/test_kernels.py for the shape/dtype sweeps).
+
+  apply_gate       statevector single-qubit gate (pair-streaming tiles)
+  fused_local      multi-gate ladder fused in VMEM (one HBM round-trip,
+                   controlled gates incl. out-of-tile controls)
+  flash_attention  blocked causal attention, zero-copy GQA, streaming softmax
+  ssd_scan         Mamba-2 SSD chunked scan (MXU dual form + VMEM carry)
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: blocked causal flash attention with native GQA.
+
+Streaming-softmax attention in the MaxText/Pallas style: grid
+(batch, q_head, q_blocks, k_blocks) with the k dimension iterated
+sequentially so the running max / denominator / accumulator live in VMEM
+scratch across k steps.  GQA is zero-copy: the K/V BlockSpec index maps fold
+`q_head -> kv_head = q_head // group` so grouped heads read the same KV
+blocks without materializing a repeat.
+
+Causal masking is two-level: k blocks fully above the diagonal are skipped
+(`pl.when`), the diagonal block masks per-element.  Block shapes default to
+(128, 128) — MXU-aligned on the contraction (head_dim) and lane dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, nk: int, causal: bool, scale: float):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, _NEG_INF, m_scr.dtype)
+        l_scr[...] = jnp.zeros(l_scr.shape, l_scr.dtype)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, acc_scr.dtype)
+
+    # last k block this q block attends to
+    if causal:
+        last_j = jnp.minimum(nk - 1, (i * bq + bq - 1) // bk)
+        live = j <= last_j
+    else:
+        last_j = nk - 1
+        live = j >= 0
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qi >= kj, s, _NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == last_j)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / l_scr[...]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           scale: float | None = None,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = True):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0.
+
+    Returns (B, Hq, S, D) in q.dtype.  Sequence length must divide by the
+    block sizes (callers pad; the LM stack always uses power-of-two seqs).
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    group = Hq // Hkv
+    bq, bk = min(block_q, S), min(block_k, Sk)
+    if S % bq or Sk % bk:
+        raise ValueError("sequence length must divide block size")
+    nq, nk = S // bq, Sk // bk
+    scale = scale if scale is not None else D ** -0.5
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, nk=nk,
+                               causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

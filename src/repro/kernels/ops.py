@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True because this container executes kernels on CPU;
+real-TPU deployments pass interpret=False (the `use_pallas` model-config
+flag routes model code here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .apply_gate import apply_gate_pallas
+from .flash_attention import flash_attention_pallas
+from .fused_local import fused_gates_pallas, tape_to_gate_list
+from .ssd_scan import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def apply_gate(psi, mat, q: int, interpret: bool = True):
+    return apply_gate_pallas(psi, mat, q, interpret=interpret)
+
+
+def fused_gates(psi, gate_list, interpret: bool = True):
+    """Not jit-wrapped at this level: gate_list is trace-time static; callers
+    jit the enclosing circuit function."""
+    return fused_gates_pallas(psi, gate_list, interpret=interpret)
+
+
+def run_tape_fused(psi, tape, interpret: bool = True):
+    """Execute a waveform tape through the fused kernel (targets must be
+    in-lane; the MonitorProcess falls back to the interpreter otherwise)."""
+    return fused_gates_pallas(psi, tape_to_gate_list(tape),
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True):
+    return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret
+mode on CPU, compiled mode on real TPU).  Written for clarity, not speed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --- apply_gate / fused_local ------------------------------------------------
+
+def apply_gate_ref(psi, mat, q: int, ctrl: int = -1):
+    """Dense (hi, 2, lo) contraction; mirrors quantum.statevector."""
+    n = psi.shape[0]
+    lo = 2 ** q
+    hi = n // (2 * lo)
+    v = psi.reshape(hi, 2, lo)
+    out = jnp.einsum("ab,hbl->hal", jnp.asarray(mat, psi.dtype), v)
+    if ctrl >= 0:
+        cbit = (jnp.arange(n, dtype=jnp.int32) >> ctrl) & 1
+        out = jnp.where((cbit == 1).reshape(hi, 2, lo), out, v)
+    return out.reshape(-1)
+
+
+def fused_gates_ref(psi, gate_list):
+    for mat, q, c in gate_list:
+        psi = apply_gate_ref(psi, mat, q, c)
+    return psi
+
+
+# --- flash attention -----------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Dense softmax attention with GQA broadcast. q: (B,Hq,S,D)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(k.shape[2])[None, :]
+        s = jnp.where(qi >= kj, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --- SSD scan --------------------------------------------------------------------
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Naive per-token recurrence: h_t = exp(dt A) h_{t-1} + dt B_t x_t^T,
+    y_t = C_t . h_t.  x: (Bt,L,H,P); dt: (Bt,L,H); A: (H,); B,C: (Bt,L,N)."""
+    Bt, L, H, P = x.shape
+    N = B.shape[-1]
+
+    def per_bh(xb, dtb, a, Bb, Cb):
+        # xb: (L,P), dtb: (L,), Bb/Cb: (L,N)
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(dtt * a) * h + dtt * jnp.outer(bt, xt)
+            return h, ct @ h
+
+        h0 = jnp.zeros((N, P), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb.astype(jnp.float32),
+                                        dtb.astype(jnp.float32),
+                                        Bb.astype(jnp.float32),
+                                        Cb.astype(jnp.float32)))
+        return ys
+
+    fn = jax.vmap(jax.vmap(per_bh, in_axes=(1, 1, 0, None, None), out_axes=1),
+                  in_axes=(0, 0, None, 0, 0))
+    return fn(x, dt, A, B, C).astype(x.dtype)

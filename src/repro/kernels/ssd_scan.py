@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (state-space duality form).
+
+Computes, per (batch, head), the selective-state-space recurrence
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t (x) x_t        (N x P state)
+    y_t = C_t . h_t
+
+in the SSD chunk-dual form: the sequence is tiled into chunks of Q tokens;
+within a chunk the quadratic dual (attention-like) term runs on the MXU,
+between chunks a (N, P) state carried in VMEM scratch propagates the
+recurrence — grid (B, H, n_chunks) with the chunk axis sequential.
+
+This is the TPU re-blocking of the Mamba-2 Triton kernel: the chunk size is
+matched to MXU tiles (Q=128), decay factors are computed as cumulative sums
+in f32, and the inter-chunk carry never leaves VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_scr, *,
+                Q: int, N: int, P: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        state_scr[...] = jnp.zeros(state_scr.shape, state_scr.dtype)
+
+    a = a_ref[0]                                   # scalar A_h (negative)
+    x = x_ref[0, 0].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)          # (Q, 1)
+    Bm = b_ref[0].astype(jnp.float32)              # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)              # (Q, N)
+
+    da = dt[:, 0] * a                               # (Q,)
+    cum = jnp.cumsum(da)                            # inclusive cumsum
+    total = cum[-1]
+
+    # ---- intra-chunk (dual/attention-like) term --------------------------
+    # L[i, t] = exp(cum_i - cum_t) for i >= t else 0 ; scores = (C B^T) * L
+    li = cum[:, None]
+    lt = cum[None, :]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    decay = jnp.exp(jnp.where(mask, li - lt, -1e30))   # mask inside the exp
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    att = scores * decay * dt[:, 0][None, :]       # weight dt_t on inputs
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk term: contribution of carried state ------------------
+    state = state_scr[...]                          # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # ---- state update ------------------------------------------------------
+    w = jnp.exp(total - cum) * dt[:, 0]             # (Q,)
+    new_state = jnp.exp(total) * state + jax.lax.dot_general(
+        Bm * w[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    state_scr[...] = new_state
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk: int = DEFAULT_CHUNK,
+                    interpret: bool = True):
+    """x: (Bt, L, H, P); dt: (Bt, L, H) > 0; A: (H,) < 0;
+    B, C: (Bt, L, N) shared across heads (single SSD group).
+
+    Returns y: (Bt, L, H, P).
+    """
+    Bt, L, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    if L % Q:
+        raise ValueError("sequence length must divide chunk size")
+    nc = L // Q
+
+    xt = jnp.transpose(x, (0, 2, 1, 3))             # (Bt, H, L, P)
+    dtt = jnp.transpose(dt, (0, 2, 1))[..., None]   # (Bt, H, L, 1)
+
+    kernel = functools.partial(_ssd_kernel, Q=Q, N=N, P=P)
+    yt = pl.pallas_call(
+        kernel,
+        grid=(Bt, H, nc),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (h,)),                # A
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, j: (b, h, j, 0)),  # x
+            pl.BlockSpec((1, 1, Q, 1), lambda b, h, j: (b, h, j, 0)),  # dt
+            pl.BlockSpec((1, Q, N), lambda b, h, j: (b, j, 0)),        # B
+            pl.BlockSpec((1, Q, N), lambda b, h, j: (b, j, 0)),        # C
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, h, j: (b, h, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt, H, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(A, xt, dtt, B, C)
+    return jnp.transpose(yt, (0, 2, 1, 3))

@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract the roofline terms.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  512 host devices back both meshes: (16, 16) single
+pod and (2, 16, 16) multi-pod.
+
+Per cell this driver:
+  1. resolves the sharding rule table against the mesh (absent axes drop,
+     batch axes shrink until they divide the global batch),
+  2. builds the step function (train_step / prefill / decode) and lowers it
+     with ShapeDtypeStruct inputs (zero allocation),
+  3. compiles, records memory_analysis / cost_analysis, and walks the
+     optimized HLO for scan-aware FLOPs + HBM + collective bytes
+     (launch/hloanalysis.py),
+  4. appends the record to a JSON results file (restart-safe: completed
+     cells are skipped).
+
+Usage:
+  python -m repro.launch.dryrun --mesh both --out results/dryrun.json
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k \
+      --mesh single --rules fsdp_tp
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get_config, get_rule_overrides, list_archs
+from ..models import params as MP, transformer as T
+from ..models.steps import make_prefill, make_serve_step, make_train_step
+from ..optim import opt_state_specs
+from ..parallel.sharding import ShardingRules, rules_by_name
+from .hloanalysis import analyze_hlo
+from .mesh import make_production_mesh, mesh_axis_sizes
+from .shapes import SHAPES, cell_applicable, input_specs
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link (3 usable links assumed -> 150e9
+ICI_LINKS = 3.0            # aggregate per-chip ICI bandwidth multiplier
+DCN_BW = 25e9              # pod-axis bandwidth per chip (DCN)
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def resolve_rules(base: ShardingRules, mesh, cell) -> ShardingRules:
+    """Strip absent mesh axes; shrink batch axes until they divide the
+    global batch (long_500k has batch 1 -> unsharded batch)."""
+    sizes = mesh_axis_sizes(mesh)
+    table = {}
+    for k, v in base.table.items():
+        if isinstance(v, tuple):
+            vv = tuple(a for a in v if a in sizes)
+            table[k] = vv if vv else None
+        elif isinstance(v, str):
+            table[k] = v if v in sizes else None
+        else:
+            table[k] = v
+    bt = table.get("batch")
+    if bt:
+        bt = bt if isinstance(bt, tuple) else (bt,)
+        while bt and cell.global_batch % _prod(sizes[a] for a in bt):
+            bt = bt[1:]
+        table["batch"] = bt if bt else None
+    return ShardingRules(table)
+
+
+def _shard_tree(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def _batch_shardings(cfg, cell, rules, mesh):
+    specs = {"tokens": rules.spec(("batch", None))}
+    if cell.kind == "train":
+        specs["labels"] = rules.spec(("batch", None))
+    if cfg.family == "vlm":
+        specs["patches"] = rules.spec(("batch", None, None))
+    if cfg.family == "encdec":
+        specs["frames"] = rules.spec(("batch", None, None))
+    return _shard_tree(specs, mesh)
+
+
+def run_cell(arch: str, shape: str, mesh, rules_name: str = "fsdp_tp",
+             save_hlo: str | None = None, remat: str | None = None,
+             attn_mixed: bool = False, moe_local: bool = False,
+             moe_shmap: bool = False, kv_quant: bool = False) -> dict:
+    """Lower + compile one (arch x shape) cell on `mesh`; return the record."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if remat:
+        cfg = _dc.replace(cfg, remat=remat)
+    if attn_mixed:
+        cfg = _dc.replace(cfg, attn_mixed=True, ffn_mixed=True)
+    if moe_local and cfg.n_experts:
+        dp = mesh_axis_sizes(mesh).get("data", 1)
+        cfg = _dc.replace(cfg, ec_groups=dp)
+    if moe_shmap and cfg.n_experts:
+        cfg = _dc.replace(cfg, moe_shmap=True)
+    if kv_quant:
+        cfg = _dc.replace(cfg, kv_quant=True)
+    cell = SHAPES[shape]
+    tp = mesh_axis_sizes(mesh).get("model", 1)
+    base = rules_by_name(rules_name).with_overrides(get_rule_overrides(arch))
+    rules = resolve_rules(base, mesh, cell).with_mesh(mesh)
+    defs = T.model_defs(cfg)
+    pspecs = MP.param_specs(defs, rules)
+    pshard = _shard_tree(pspecs, mesh)
+    pstruct = MP.param_shapes(defs, cfg.dtype)
+    rec = {
+        "arch": arch, "shape": shape, "rules": rules_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_chips": int(mesh.devices.size),
+        "variant": {"remat": cfg.remat, "attn_mixed": cfg.attn_mixed,
+                    "ffn_mixed": cfg.ffn_mixed, "ec_groups": cfg.ec_groups,
+                    "moe_shmap": cfg.moe_shmap, "kv_quant": cfg.kv_quant},
+    }
+    t0 = time.time()
+
+    with mesh:
+        if cell.kind == "train":
+            train_step, opt = make_train_step(cfg, rules, mesh_tp=tp)
+            ospecs = opt_state_specs(defs, rules, cfg.optimizer)
+            sspec = {"params": pspecs, "opt": ospecs, "step": P()}
+            sshard = _shard_tree(sspec, mesh)
+            state_struct = {
+                "params": pstruct,
+                "opt": jax.eval_shape(opt.init, pstruct),
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            bshard = _batch_shardings(cfg, cell, rules, mesh)
+            mshard = {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P())}
+            fn = jax.jit(train_step, in_shardings=(sshard, bshard),
+                         out_shardings=(sshard, mshard), donate_argnums=(0,))
+            lowered = fn.lower(state_struct, input_specs(cfg, cell))
+        elif cell.kind == "prefill":
+            prefill = make_prefill(cfg, rules, mesh_tp=tp)
+            bshard = _batch_shardings(cfg, cell, rules, mesh)
+            out_spec = NamedSharding(mesh, rules.spec(("batch", "logits_seq", "vocab")))
+            fn = jax.jit(prefill, in_shardings=(pshard, bshard),
+                         out_shardings=out_spec)
+            lowered = fn.lower(pstruct, input_specs(cfg, cell))
+        else:   # decode
+            serve = make_serve_step(cfg, rules, mesh_tp=tp)
+            cdefs = T.cache_defs(cfg, cell.global_batch, cell.seq_len)
+            cspecs = MP.param_specs(cdefs, rules)
+            cshard = _shard_tree(cspecs, mesh)
+            tok_shard = NamedSharding(mesh, rules.spec(("batch", None)))
+            logits_shard = NamedSharding(mesh,
+                                         rules.spec(("batch", "logits_seq", "vocab")))
+            fn = jax.jit(serve,
+                         in_shardings=(pshard, cshard, tok_shard,
+                                       NamedSharding(mesh, P())),
+                         out_shardings=(logits_shard, cshard),
+                         donate_argnums=(1,))
+            specs = input_specs(cfg, cell)
+            lowered = fn.lower(pstruct, specs["cache"], specs["tokens"],
+                               specs["pos"])
+
+        compiled = lowered.compile()
+
+    rec["compile_s"] = round(time.time() - t0, 1)
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_per_device": int(ma.argument_size_in_bytes
+                               + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               - ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost"] = {"flops_loopbody_once": float(ca.get("flops", -1)),
+                       "bytes_loopbody_once": float(ca.get("bytes accessed", -1))}
+    text = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(text)
+    s = analyze_hlo(text, seq_len=cell.seq_len
+                    if cell.kind in ("train", "prefill") else None,
+                    pod_size=256 if rec["n_chips"] > 256 else None)
+    rec["hlo"] = {
+        "flops_per_device": s.flops,
+        "hbm_bytes_per_device": s.hbm_bytes,
+        "collective_bytes_per_device": s.collective_bytes,
+        "total_collective_bytes": s.total_collective_bytes,
+        "score_bytes_per_device": s.score_bytes,
+        "hbm_flash_adjusted": s.flash_adjusted_hbm(),
+        "dcn_bytes_per_device": s.dcn_bytes,
+    }
+    # roofline terms (seconds)
+    rec["roofline"] = roofline_terms(rec, cfg, cell)
+    return rec
+
+
+def model_flops(cfg, cell) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D for train, 2*N_active*D for
+    prefill, 2*N_active*B for one decode token (global, all chips)."""
+    n = cfg.n_active_params()
+    tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch        # one token per sequence
+
+
+def roofline_terms(rec, cfg, cell) -> dict:
+    chips = rec["n_chips"]
+    multi_pod = chips > 256
+    f = rec["hlo"]["flops_per_device"]
+    b = rec["hlo"]["hbm_bytes_per_device"]
+    c = rec["hlo"]["total_collective_bytes"]
+    dcn = rec["hlo"].get("dcn_bytes_per_device", 0.0)
+    t_compute = f / PEAK_FLOPS
+    t_memory = b / HBM_BW
+    t_mem_flash = rec["hlo"].get("hbm_flash_adjusted", b) / HBM_BW
+    # ICI traffic rides the intra-pod torus; only pod-crossing groups pay DCN
+    t_coll = (c - dcn) / (ICI_BW * ICI_LINKS) + dcn / DCN_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    mf = model_flops(cfg, cell)
+    useful = mf / (f * chips) if f > 0 else 0.0
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_flash_s": t_mem_flash,
+        "t_collective_s": t_coll,
+        "dominant": dom[1],
+        "model_flops_global": mf,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": t_compute / max(t_compute, t_memory, t_coll)
+        if max(t_compute, t_memory, t_coll) > 0 else 0.0,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="MPI-Q multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--rules", default="fsdp_tp")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--remat", default=None, choices=[None, "none", "full", "nothing", "dots"])
+    ap.add_argument("--attn-mixed", action="store_true")
+    ap.add_argument("--moe-local", action="store_true")
+    ap.add_argument("--moe-shmap", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true")
+    a = ap.parse_args(argv)
+
+    archs = list_archs() if a.arch == "all" else [a.arch]
+    shapes = list(SHAPES) if a.shape == "all" else [a.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[a.mesh]
+
+    os.makedirs(os.path.dirname(a.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(a.out):
+        with open(a.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("rules"))
+            for r in results if "error" not in r and "skip" not in r}
+
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "x".join(map(str, mesh.devices.shape))
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, mesh_name, a.rules)
+                if key in done:
+                    print(f"[skip-done] {key}")
+                    continue
+                ok, reason = cell_applicable(arch, shape)
+                if not ok:
+                    print(f"[skip] {arch} x {shape}: {reason}")
+                    results = [r for r in results
+                               if (r["arch"], r["shape"], r["mesh"],
+                                   r.get("rules")) != key]
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": mesh_name, "rules": a.rules,
+                                    "skip": reason})
+                    _write(a.out, results)
+                    continue
+                print(f"[compile] {arch} x {shape} on {mesh_name} "
+                      f"({a.rules}) ...", flush=True)
+                hlo_path = None
+                if a.hlo_dir:
+                    os.makedirs(a.hlo_dir, exist_ok=True)
+                    hlo_path = os.path.join(
+                        a.hlo_dir, f"{arch}_{shape}_{mesh_name}.hlo")
+                try:
+                    rec = run_cell(arch, shape, mesh, a.rules,
+                                   save_hlo=hlo_path, remat=a.remat,
+                                   attn_mixed=a.attn_mixed,
+                                   moe_local=a.moe_local,
+                                   moe_shmap=a.moe_shmap,
+                                   kv_quant=a.kv_quant)
+                    r = rec["roofline"]
+                    print(f"  ok in {rec['compile_s']}s | "
+                          f"mem/dev={rec['memory']['peak_per_device']/2**30:.2f}GiB "
+                          f"| t_comp={r['t_compute_s']:.4f}s "
+                          f"t_mem={r['t_memory_s']:.4f}s "
+                          f"t_coll={r['t_collective_s']:.4f}s "
+                          f"dom={r['dominant']}", flush=True)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "rules": a.rules, "error": str(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"  ERROR: {e}", flush=True)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"],
+                               r.get("rules")) != key]
+                results.append(rec)
+                _write(a.out, results)
+    print("dry-run complete:", a.out)
+
+
+def _write(path, results):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(tmp, path)
+
+
+if __name__ == "__main__":
+    main()

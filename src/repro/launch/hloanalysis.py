@@ -1,0 +1,344 @@
+"""Post-optimization HLO text analyzer for the roofline report.
+
+XLA's built-in cost analysis counts `while` bodies once, which makes it
+useless for scan-over-layers models.  This walks `compiled.as_text()`
+itself:
+
+  * per-computation FLOPs (dot/convolution ops, incl. inside while bodies)
+    and HBM traffic (operand+result bytes of top-level instructions —
+    fusions are single instructions post-optimization, so this matches
+    XLA's memory model),
+  * per-computation collective traffic by op kind,
+  * exact while-loop trip counts from `backend_config known_trip_count`,
+    composed multiplicatively through nested loops,
+  * scan-stacked buffers (leading dim == trip count of the enclosing loop)
+    are charged one slice per iteration, not the full stack — XLA fusions
+    dynamic-slice them internally.
+
+Everything is per-device (the module is the SPMD-partitioned program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*(?:\(|\.)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "after-all", "iota"}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _sliced_bytes(shape_str: str, trip: int) -> int:
+    """Bytes of one per-iteration slice when the buffer is scan-stacked."""
+    dims = _shape_dims(shape_str)
+    full = _shape_bytes(shape_str)
+    if trip > 1 and dims and dims[0] == trip:
+        return full // trip
+    return full
+
+
+_EXPL_GROUPS = re.compile(r"replica_groups=\{\{([\d,{} ]*)\}\}")
+_IOTA_GROUPS = re.compile(
+    r"replica_groups=\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def crosses_pods(attr_text: str, pod_size: int) -> bool:
+    """True when any replica group spans devices from different pods
+    (device id // pod_size differs within a group)."""
+    m = _EXPL_GROUPS.search(attr_text)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.replace("{", "").replace("}", "")
+                   .split(",") if x.strip()]
+            if len({i // pod_size for i in ids}) > 1:
+                return True
+        return False
+    m = _IOTA_GROUPS.search(attr_text)
+    if m:
+        import numpy as _np
+        dims = [int(x) for x in m.group(1).split(",")]
+        reshape = [int(x) for x in m.group(2).split(",")]
+        perm = ([int(x) for x in m.group(3).split(",")]
+                if m.group(3) else list(range(len(reshape))))
+        n = 1
+        for d in reshape:
+            n *= d
+        ids = _np.arange(n).reshape(reshape).transpose(perm).reshape(dims)
+        groups = ids.reshape(dims[0], -1) if len(dims) > 1 else ids[None, :]
+        for g in groups:
+            if len({int(i) // pod_size for i in g}) > 1:
+                return True
+        return False
+    return True   # unknown format: assume worst case
+
+
+@dataclasses.dataclass
+class Instr:
+    op: str
+    out_shape: str
+    in_shapes: list
+    flops: float = 0.0
+    attrs: str = ""
+
+
+@dataclasses.dataclass
+class CompStats:
+    instrs: list = dataclasses.field(default_factory=list)
+    whiles: list = dataclasses.field(default_factory=list)  # (body, trip)
+
+
+def _parse_computations(text: str) -> dict[str, CompStats]:
+    comps: dict[str, CompStats] = {}
+    shapes: dict[str, dict[str, str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if line and not line.startswith(" ") and ("{" in line) and ("->" in line):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = CompStats()
+                shapes[cur] = {}
+                for pm in re.finditer(r"([\w\.\-]+):\s*(\([^)]*\)|\S+?[\]\}])",
+                                      line):
+                    shapes[cur][pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        ls = line.strip()
+        if ls.startswith("ROOT "):
+            ls = ls[5:]
+        if not ls.startswith("%") or " = " not in ls:
+            continue
+        eq = ls.index(" = ")
+        name = ls[1:eq]
+        rest = ls[eq + 3:]
+        if rest.startswith("("):               # tuple shape: balanced parens
+            depth = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            shape_str = rest[:i + 1]
+            rest2 = rest[i + 1:].lstrip()
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                continue
+            shape_str = rest[:sp]
+            rest2 = rest[sp + 1:].lstrip()
+        par = rest2.find("(")
+        if par < 0:
+            continue
+        op = rest2[:par]
+        shapes[cur][name] = shape_str
+        st = comps[cur]
+
+        # operands
+        paren = rest2[par + 1:]
+        depth = 1
+        arglist = []
+        for ci, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    arglist = _OPERAND_RE.findall(paren[:ci])
+                    break
+        in_shapes = [shapes[cur].get(a, "") for a in arglist]
+
+        if op == "while":
+            trip = 1
+            tm = _TRIP_RE.search(rest2)
+            if tm:
+                trip = int(tm.group(1))
+            bm = _BODY_RE.search(rest2)
+            if bm:
+                st.whiles.append((bm.group(1), trip))
+            continue
+
+        flops = 0.0
+        if op == "dot":
+            k = 1.0
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest2)
+            if cm and in_shapes:
+                lhs_dims = _shape_dims(in_shapes[0])
+                if cm.group(1):
+                    for d in cm.group(1).split(","):
+                        di = int(d)
+                        if di < len(lhs_dims):
+                            k *= lhs_dims[di]
+            n_out = 1
+            for d in _shape_dims(shape_str):
+                n_out *= d
+            flops = 2.0 * n_out * k
+        elif op == "convolution":
+            n_out = 1
+            for d in _shape_dims(shape_str):
+                n_out *= d
+            kf = 1
+            if len(in_shapes) > 1:
+                for d in _shape_dims(in_shapes[1]):
+                    kf *= d
+            flops = 2.0 * n_out * max(kf, 1)
+
+        st.instrs.append(Instr(op, shape_str, in_shapes, flops,
+                                attrs=rest2))
+    return comps
+
+
+def _instr_bytes(ins: Instr, trip: int) -> float:
+    if ins.op in _SKIP_BYTES:
+        return 0.0
+    if ins.op == "dynamic-update-slice":
+        upd = (_shape_bytes(ins.in_shapes[1]) if len(ins.in_shapes) > 1
+               else _shape_bytes(ins.out_shape))
+        return 2.0 * upd
+    if ins.op in ("dynamic-slice", "gather"):
+        return 2.0 * _shape_bytes(ins.out_shape)
+    if ins.op == "scatter":
+        upd = (_shape_bytes(ins.in_shapes[2]) if len(ins.in_shapes) > 2
+               else _shape_bytes(ins.out_shape))
+        return 2.0 * upd
+    out_b = _sliced_bytes(ins.out_shape, trip)
+    in_b = sum(_sliced_bytes(s, trip) for s in ins.in_shapes)
+    return out_b + in_b
+
+
+def _coll_bytes(ins: Instr) -> float:
+    out_b = _shape_bytes(ins.out_shape)
+    in_b = sum(_shape_bytes(s) for s in ins.in_shapes)
+    if ins.op == "all-gather":
+        return max(out_b - in_b, 0)
+    if ins.op == "reduce-scatter":
+        return max(in_b - out_b, 0)
+    if ins.op == "all-reduce":
+        return 2.0 * out_b
+    return float(out_b)    # all-to-all, collective-permute
+
+
+@dataclasses.dataclass
+class HloSummary:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: dict      # kind -> per-device bytes
+    n_collectives: int
+    score_bytes: float = 0.0    # S^2 attention score/grad tensor traffic
+    qkvo_bytes: float = 0.0     # q/k/v/o-sized tensor traffic at attention
+    dcn_bytes: float = 0.0      # collective bytes whose groups cross pods
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    def flash_adjusted_hbm(self, restream_frac: float = 0.25) -> float:
+        """HBM traffic with the Pallas flash kernel on the TPU target:
+        S^2 score tensors never reach HBM; the kernel re-streams K/V tiles
+        instead.  For bq=128 blocks and D=128 heads the re-stream bytes are
+        ~D/(4*bq_bytes_per_score) ~ 25% of the eliminated f32 score
+        traffic, so we charge `restream_frac` of it back."""
+        if self.score_bytes == 0:
+            return self.hbm_bytes
+        return self.hbm_bytes - (1.0 - restream_frac) * self.score_bytes
+
+
+def _is_score_shape(shape_str: str, seq_len: int) -> bool:
+    """Attention score/grad signature: trailing dim == kv seq len with a
+    seq-like dim before it and rank >= 3 (batch/head leading dims)."""
+    dims = _shape_dims(shape_str)
+    if len(dims) < 3 or not seq_len:
+        return False
+    if dims[-1] != seq_len:
+        return False
+    return dims[-2] == seq_len or (len(dims) >= 4
+                                   and seq_len % dims[-2] == 0)
+
+
+def analyze_hlo(text: str, seq_len: int | None = None,
+                pod_size: int | None = None) -> HloSummary:
+    comps = _parse_computations(text)
+    m = re.search(r"^ENTRY %?([\w\.\-]+)", text, re.MULTILINE)
+    if not m:
+        raise ValueError("no ENTRY computation found")
+    entry = m.group(1)
+
+    # multiplier + immediate trip count per computation
+    mult: dict[str, float] = defaultdict(float)
+    trips: dict[str, int] = defaultdict(lambda: 1)
+
+    def visit(name: str, k: float, depth=0):
+        if name not in comps or depth > 16:
+            return
+        mult[name] += k
+        for body, trip in comps[name].whiles:
+            trips[body] = max(trips[body], trip)
+            visit(body, k * trip, depth + 1)
+
+    visit(entry, 1.0)
+
+    flops = hbm = score = qkvo = dcn = 0.0
+    coll: dict[str, float] = defaultdict(float)
+    n_coll = 0
+    for name, k in mult.items():
+        st = comps[name]
+        trip = trips[name]
+        for ins in st.instrs:
+            flops += k * ins.flops
+            b = _instr_bytes(ins, trip)
+            hbm += k * b
+            if seq_len:
+                shapes_here = [ins.out_shape] + ins.in_shapes
+                if any(_is_score_shape(sh, seq_len) for sh in shapes_here):
+                    # split this instruction's traffic into score-shaped
+                    # bytes (eliminated by flash) and qkvo-shaped bytes
+                    # (the kernel's working tensors)
+                    sb = sum(_sliced_bytes(sh, trip) for sh in shapes_here
+                             if _is_score_shape(sh, seq_len))
+                    score += k * min(sb, b)
+                    qkvo += k * max(b - sb, 0)
+            if ins.op in COLLECTIVES:
+                cb = _coll_bytes(ins)
+                coll[ins.op] += k * cb
+                n_coll += int(k)
+                if pod_size and crosses_pods(ins.attrs, pod_size):
+                    dcn += k * cb
+    return HloSummary(flops=flops, hbm_bytes=hbm,
+                      collective_bytes=dict(coll), n_collectives=n_coll,
+                      score_bytes=score, qkvo_bytes=qkvo, dcn_bytes=dcn)

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (16, 16) -> ("data", "model").
+Multi-pod:  2 pods x 256 chips as (2, 16, 16) -> ("pod", "data", "model");
+the "pod" axis crosses DCN, "data"/"model" stay inside a pod's ICI torus.
+
+A function, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

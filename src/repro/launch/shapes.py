@@ -1,0 +1,84 @@
+"""Input-shape cells assigned to every architecture.
+
+    train_4k     seq 4,096   global_batch 256   (training step)
+    prefill_32k  seq 32,768  global_batch 32    (inference prefill)
+    decode_32k   KV 32,768   global_batch 128   (one-token decode)
+    long_500k    KV 524,288  global_batch 1     (long-context decode;
+                 sub-quadratic archs only — skipped for pure full-attention)
+
+`input_specs` builds ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero device allocation) for every model input of a cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SUBQUADRATIC
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..models.params import param_shapes
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "SKIP(full-attn): 500k decode needs a sub-quadratic path"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for the data batch of a train/prefill cell."""
+    B, S = cell.global_batch, cell.seq_len
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if cell.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        out["patches"] = _sds((B, cfg.n_patches, cfg.d_model), cfg.dtype)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, cfg.enc_frames, cfg.d_model), cfg.dtype)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for a decode cell: token batch + full KV cache."""
+    B, S = cell.global_batch, cell.seq_len
+    cache = param_shapes(T.cache_defs(cfg, B, S), cfg.dtype)
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def param_struct(cfg: ModelConfig) -> dict:
+    return param_shapes(T.model_defs(cfg), cfg.dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    if cell.kind in ("train", "prefill"):
+        return batch_specs(cfg, cell)
+    return decode_specs(cfg, cell)

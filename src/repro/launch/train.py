@@ -1,0 +1,139 @@
+"""End-to-end training driver.
+
+Runs real steps on the local device(s): data pipeline -> jitted train_step
+-> metrics -> periodic async checkpoint, with crash-resume (restores the
+latest complete checkpoint and seeks the data stream to the resumed step).
+
+For the ~100M-scale example run used in examples/train_lm.py:
+    python -m repro.launch.train --arch qwen2.5-3b --scale 100m \
+        --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ck
+`--scale full` trains the exact pool config (needs the real cluster);
+`--scale 100m` / `--scale smoke` shrink width/depth but keep the family.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import store
+from ..configs import get_config, get_rule_overrides
+from ..data.pipeline import SyntheticTokens
+from ..models import params as MP, transformer as T
+from ..models.steps import make_train_step
+from ..parallel.sharding import rules_by_name
+
+
+def scale_config(cfg, scale: str):
+    if scale == "full":
+        return cfg
+    if scale == "smoke":
+        return cfg.reduced()
+    if scale == "100m":
+        return dataclasses.replace(
+            cfg, name=cfg.name + "-100m",
+            n_layers=min(cfg.n_layers, 12
+                         if cfg.family != "hybrid" else cfg.attn_every),
+            d_model=512, n_heads=8, n_kv_heads=min(cfg.n_kv_heads, 4) or 0,
+            head_dim=64, d_ff=1536,
+            vocab_size=min(cfg.vocab_size, 32000),
+            n_experts=min(cfg.n_experts, 8),
+            expert_d_ff=512 if cfg.expert_d_ff else 0,
+            ssm_state=min(cfg.ssm_state, 64) if cfg.ssm_state else 0,
+            ssm_head_dim=64,
+            n_enc_layers=min(cfg.n_enc_layers, 4),
+            enc_frames=256 if cfg.n_enc_layers else cfg.enc_frames,
+            n_patches=min(cfg.n_patches, 64),
+            dtype=jnp.float32, remat="none")
+    raise ValueError(scale)
+
+
+def extra_inputs(cfg, B, rng):
+    out = {}
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), cfg.dtype)
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_frames, cfg.d_model)), cfg.dtype)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--scale", default="100m",
+                    choices=["smoke", "100m", "full"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--rules", default="fsdp_tp")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default=None)
+    a = ap.parse_args(argv)
+
+    cfg = scale_config(get_config(a.arch), a.scale)
+    rules = rules_by_name(a.rules).with_overrides(get_rule_overrides(a.arch))
+    n_dev = jax.device_count()
+    tp = 1   # local run: no model axis
+
+    print(f"arch={cfg.name} family={cfg.family} params={cfg.n_params():,} "
+          f"devices={n_dev}")
+    key = jax.random.PRNGKey(0)
+    params = MP.init_params(T.model_defs(cfg), key, cfg.dtype)
+    train_step, opt = make_train_step(cfg, rules, lr=a.lr, mesh_tp=tp)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+
+    start = 0
+    if a.ckpt_dir:
+        latest = store.latest_step(a.ckpt_dir)
+        if latest is not None:
+            print(f"resuming from checkpoint step {latest}")
+            state = store.restore(a.ckpt_dir, latest, state)
+            state = jax.tree.map(jnp.asarray, state)
+            start = latest
+
+    ds = SyntheticTokens(cfg.vocab_size, a.batch, a.seq, seed=1)
+    rng = np.random.default_rng(0)
+    extras = extra_inputs(cfg, a.batch, rng)
+    ts = jax.jit(train_step, donate_argnums=(0,))
+
+    metrics_log = []
+    t0 = time.time()
+    pending_ckpt = None
+    for step in range(start, a.steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+        batch.update(extras)
+        state, m = ts(state, batch)
+        if (step + 1) % a.log_every == 0 or step == start:
+            loss = float(m["loss"])
+            dt = time.time() - t0
+            tok_s = (step + 1 - start) * a.batch * a.seq / dt
+            print(f"step {step+1:5d} loss {loss:.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} tok/s {tok_s:,.0f}")
+            metrics_log.append({"step": step + 1, "loss": loss,
+                                "tok_s": tok_s})
+        if a.ckpt_dir and (step + 1) % a.ckpt_every == 0:
+            if pending_ckpt is not None:
+                pending_ckpt.join()
+            pending_ckpt = store.save_async(a.ckpt_dir, step + 1, state)
+    if pending_ckpt is not None:
+        pending_ckpt.join()
+    if a.metrics_out:
+        with open(a.metrics_out, "w") as f:
+            json.dump(metrics_log, f, indent=1)
+    print("done.")
+    return metrics_log
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Model configuration for the architecture zoo.
+
+One frozen dataclass covers the six families in the assignment:
+dense / moe / ssm / hybrid / encdec (audio) / vlm.  Family-specific fields
+are zero/None when unused.  `reduced()` produces the small-config variant
+used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense|moe|ssm|hybrid|encdec|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 500_000.0
+    norm_eps: float = 1e-5
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    expert_d_ff: int = 0            # expert hidden dim (when != d_ff)
+    moe_every: int = 1              # MoE FFN every k-th layer (hybrid)
+    capacity_factor: float = 1.0
+
+    # SSM (Mamba-2 SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+
+    # hybrid interleave: one attention layer per `attn_every` layers
+    attn_every: int = 0
+
+    # encoder-decoder (audio)
+    n_enc_layers: int = 0
+    enc_frames: int = 1500          # stub frontend sequence length
+
+    # vlm stub frontend
+    n_patches: int = 0              # patch-embedding prefix length
+
+    # numerics / execution
+    dtype: object = jnp.bfloat16
+    remat: str = "full"             # none|full|nothing (checkpoint policy)
+    attn_mixed: bool = False        # bf16 attention matmuls, f32 accumulate
+    ffn_mixed: bool = False         # bf16 FFN activations (no f32 silu)
+    ec_groups: int = 1              # hierarchical expert-choice: route
+                                    # within token groups aligned to DP lanes
+    moe_shmap: bool = False         # explicit shard_map expert parallelism
+    kv_quant: bool = False          # int8 KV cache (per-vector scales)
+    scan_layers: bool = True
+    use_pallas: bool = False
+    optimizer: str = "adamw"        # adamw|adafactor
+    tie_embeddings: bool = False
+
+    # --- derived -------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def eff_expert_ff(self) -> int:
+        return self.expert_d_ff or self.d_ff
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.family == "hybrid":
+            # 1:7 attention:mamba — attention in the middle of each block
+            return (i % self.attn_every) == self.attn_every // 2
+        return True
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.n_experts > 0 and (i % self.moe_every
+                                       == self.moe_every - 1)
+
+    def n_params(self) -> int:
+        """Exact parameter count, derived from the model's own def tree."""
+        from .params import count_params
+        from .transformer import model_defs
+        return count_params(model_defs(self))
+
+    def _n_moe_layers(self) -> int:
+        if self.n_experts == 0:
+            return 0
+        if self.family == "hybrid":
+            n_super = self.n_layers // self.attn_every
+            return n_super * (self.attn_every // self.moe_every)
+        return sum(1 for i in range(self.n_layers) if self.is_moe_layer(i))
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        full = self.n_params()
+        if self.n_experts == 0:
+            return full
+        per_layer_expert = 3 * self.d_model * self.eff_expert_ff
+        n_moe = self._n_moe_layers()
+        return (full - n_moe * self.n_experts * per_layer_expert
+                + n_moe * self.experts_per_token * per_layer_expert)
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 4 if self.family != "hybrid"
+                         else max(self.attn_every, 4)),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 2,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 8),
+            experts_per_token=min(self.experts_per_token, 2),
+            expert_d_ff=64 if self.expert_d_ff else 0,
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=32,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            enc_frames=64 if self.n_enc_layers else self.enc_frames,
+            n_patches=min(self.n_patches, 16),
+            dtype=jnp.float32,
+            remat="none",
+        )

@@ -1,0 +1,502 @@
+"""Model building blocks: RMSNorm, RoPE, GQA attention, SwiGLU MLP,
+expert-choice MoE, Mamba-2 SSD mixer.  Pure functions over param dicts.
+
+Sharding policy (uniform across the zoo, driven by ShardingRules):
+  * Q heads shard over "model"; when n_heads % tp != 0 the head dim is
+    zero-padded at runtime to the next multiple (params stay faithful).
+  * KV projections/caches are small (kv_heads <= 10 everywhere in the pool,
+    always < tp=16) and stay replicated across "model"; KV is repeated to
+    the Q head count at compute time, after which the repeat output shards
+    on the head dim like Q (the gather is local per shard).
+  * Decode KV caches shard their sequence dim over "model" (context
+    parallelism) — the cache is the dominant decode footprint.
+  * MoE experts shard over "model" when divisible, else the expert FFN dim
+    does (per-arch rule override).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import ShardingRules, constrain
+from .config import ModelConfig
+from .params import ParamDef
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float):
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (S,) or (B, S)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = positions if positions.ndim == 2 else positions[None, :]
+    ang = pos[..., None].astype(jnp.float32) * freqs           # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def pad_dim(x, axis: int, to_multiple: int):
+    n = x.shape[axis]
+    pad = (-n) % to_multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    out = {
+        "wq": ParamDef((d, cfg.q_dim), ("embed", "qdim")),
+        "wk": ParamDef((d, cfg.kv_dim), ("embed", None)),
+        "wv": ParamDef((d, cfg.kv_dim), ("embed", None)),
+        "wo": ParamDef((cfg.q_dim, d), ("qdim", "embed")),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDef((cfg.q_dim,), ("qdim",), init="zeros")
+        out["bk"] = ParamDef((cfg.kv_dim,), (None,), init="zeros")
+        out["bv"] = ParamDef((cfg.kv_dim,), (None,), init="zeros")
+    return out
+
+
+def _flat_attention(q, k, v, *, causal, q_pos=None, kv_len=None,
+                    mixed=False):
+    """q: (B,S,H,D), k/v: (B,T,H,D) — KV already repeated to H heads.
+
+    mixed=True keeps the matmul *inputs* in model dtype (bf16) with f32
+    accumulation (preferred_element_type) and stores the post-softmax
+    probabilities in bf16 — halves attention HBM traffic at <=1e-2
+    logit error (validated in tests)."""
+    D = q.shape[-1]
+    if mixed:
+        s = jnp.einsum("bshd,bthd->bhst", q, k,
+                       preferred_element_type=jnp.float32) * (D ** -0.5)
+    else:
+        s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * (D ** -0.5)
+    S, T = q.shape[1], k.shape[1]
+    if causal:
+        qi = (q_pos if q_pos is not None else jnp.arange(S))[:, None]
+        s = jnp.where(qi >= jnp.arange(T)[None, :], s, -1e30)
+    elif kv_len is not None:
+        s = jnp.where(jnp.arange(T)[None, :] < kv_len, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    if mixed:
+        o = jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+    else:
+        o = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def attention(p, x, cfg: ModelConfig, rules: ShardingRules, *,
+              positions, causal=True, kv_src=None, cache=None,
+              head_pad: int = 1, interpret=True):
+    """Self- or cross-attention.  Returns (out, new_cache).
+
+    cache: dict(k, v (B, S_max, Hkv, D), len scalar) — decode appends at len.
+    head_pad: pad head count to a multiple of this (tp divisibility).
+    """
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    # Megatron-SP: all-gather the seq-sharded residual here, so the
+    # projections emit head-sharded tensors without a reshard
+    h = constrain(h, rules, ("batch", "attn_seq", "act_embed"))
+    src = kv_src if kv_src is not None else h
+    q = h @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, D)
+    k = k.reshape(B, src.shape[1], Hkv, D)
+    v = v.reshape(B, src.shape[1], Hkv, D)
+    if kv_src is None:                      # RoPE only for self-attention
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["len"]
+        if isinstance(cache["k"], dict):        # int8 KV (per-vector scales)
+            def _quant(t):
+                s_ = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1,
+                             keepdims=True) / 127.0 + 1e-8
+                q8 = jnp.clip(jnp.round(t.astype(jnp.float32) / s_),
+                              -127, 127).astype(jnp.int8)
+                return q8, s_
+
+            def _store(slot, t):
+                q8, s_ = _quant(t)
+                return {
+                    "q8": jax.lax.dynamic_update_slice(
+                        slot["q8"], q8, (0, idx, 0, 0)),
+                    "scale": jax.lax.dynamic_update_slice(
+                        slot["scale"], s_, (0, idx, 0, 0)),
+                }
+
+            nk, nv = _store(cache["k"], k), _store(cache["v"], v)
+            new_cache = {"k": nk, "v": nv, "len": idx + S}
+            # dequant fuses into the attention reads (int8 + scale traffic)
+            k = (nk["q8"].astype(jnp.float32) * nk["scale"]).astype(x.dtype)
+            v = (nv["q8"].astype(jnp.float32) * nv["scale"]).astype(x.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            new_cache = {"k": ck, "v": cv, "len": idx + S}
+            k, v = ck, cv
+        kv_len = idx + S
+    else:
+        kv_len = None
+
+    # repeat KV to the Q head count, pad heads for tp divisibility
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    Hp = H
+    if H % head_pad:
+        q = pad_dim(q, 2, head_pad)
+        k = pad_dim(k, 2, head_pad)
+        v = pad_dim(v, 2, head_pad)
+        Hp = q.shape[2]
+    q = constrain(q, rules, ("batch", "attn_seq", "heads", None))
+    if cache is not None:
+        k = constrain(k, rules, ("batch", "cache_seq", "decode_heads", None))
+        v = constrain(v, rules, ("batch", "cache_seq", "decode_heads", None))
+    else:
+        k = constrain(k, rules, ("batch", "attn_seq", "heads", None))
+        v = constrain(v, rules, ("batch", "attn_seq", "heads", None))
+
+    if (cfg.use_pallas and kv_src is None and cache is None and S >= 128
+            and S % 128 == 0):
+        from ..kernels.ops import flash_attention
+        o = jnp.transpose(
+            flash_attention(jnp.transpose(q, (0, 2, 1, 3)),
+                            jnp.transpose(k, (0, 2, 1, 3)),
+                            jnp.transpose(v, (0, 2, 1, 3)),
+                            causal=causal, interpret=interpret),
+            (0, 2, 1, 3))
+    else:
+        o = _flat_attention(q, k, v, causal=causal,
+                            q_pos=positions if cache is not None else None,
+                            kv_len=kv_len, mixed=cfg.attn_mixed)
+    if Hp != H:
+        o = o[:, :, :H, :]
+    out = o.reshape(B, S, cfg.q_dim) @ p["wo"]
+    return constrain(out, rules, ("batch", "seq", "act_embed")), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP / MoE
+# --------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "wg": ParamDef((d, cfg.d_ff), ("embed", "mlp")),
+        "wu": ParamDef((d, cfg.d_ff), ("embed", "mlp")),
+        "wd": ParamDef((cfg.d_ff, d), ("mlp", "embed")),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig, rules: ShardingRules):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    h = constrain(h, rules, ("batch", "attn_seq", "act_embed"))
+    g = h @ p["wg"]
+    if cfg.ffn_mixed:
+        a = jax.nn.silu(g)                       # bf16 activation
+    else:
+        a = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = (a * (h @ p["wu"])) @ p["wd"]
+    return constrain(out, rules, ("batch", "seq", "act_embed"))
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.eff_expert_ff
+    return {
+        "router": ParamDef((d, e), ("embed", None), dtype=jnp.float32),
+        "wg": ParamDef((e, d, f), ("experts", "embed", "expert_mlp")),
+        "wu": ParamDef((e, d, f), ("experts", "embed", "expert_mlp")),
+        "wd": ParamDef((e, f, d), ("experts", "expert_mlp", "embed")),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+
+
+def moe_ec_shmap(p, x, cfg: ModelConfig, rules: ShardingRules):
+    """Explicit expert-parallel MoE (shard_map).
+
+    The MPI-Q realization of EP: every device routes its *local* tokens
+    (replicated across "model"), serves only its *local* experts (fixed
+    binding, exactly the qrank->device discipline of §3.1), and the only
+    collective is one bf16 psum of partial outputs over "model" — the
+    scatter/compute/gather schedule the paper's MPIQ_Scatter/Gather pair
+    expresses, with deterministic payload sizes.
+    """
+    mesh = rules.mesh
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    E_loc = E // tp
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+
+    def _mesh_spec(axes):
+        # resolve against THIS mesh (strip axes the mesh doesn't have)
+        from jax.sharding import PartitionSpec as PS
+        names = set(mesh.axis_names)
+        out = []
+        for a in rules.spec(axes):
+            if isinstance(a, tuple):
+                a = tuple(x_ for x_ in a if x_ in names) or None
+            elif a is not None and a not in names:
+                a = None
+            out.append(a)
+        return PS(*out)
+
+    batch_spec = _mesh_spec(("batch", None, None))
+    w_spec = _mesh_spec(("experts", "embed", "expert_mlp"))
+    wd_spec = _mesh_spec(("experts", "expert_mlp", "embed"))
+    embed_ax = rules.table.get("embed")
+    embed_ax = embed_ax if embed_ax in mesh.axis_names else None
+
+    def local(hl, router, wg, wu, wd):
+        # hl: (B_loc, S, d) — replicated over "model"
+        Bl = hl.shape[0]
+        Tl = Bl * S
+        Cl = max(1, -(-Tl * k // E))
+        if embed_ax:                       # FSDP gather of expert weights
+            wg = jax.lax.all_gather(wg, embed_ax, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, embed_ax, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, embed_ax, axis=2, tiled=True)
+        m = jax.lax.axis_index("model")
+        flat = hl.reshape(Tl, d)
+        probs = jax.nn.softmax(flat.astype(jnp.float32) @ router, axis=-1)
+        probs_loc = jax.lax.dynamic_slice_in_dim(probs, m * E_loc, E_loc, 1)
+        gate, idx = jax.lax.top_k(probs_loc.T, Cl)            # (E_loc, Cl)
+        xe = jnp.take(flat, idx.reshape(-1), axis=0).reshape(E_loc, Cl, d)
+        ge = jnp.einsum("ecd,edf->ecf", xe, wg)
+        a = (jax.nn.silu(ge) if cfg.ffn_mixed
+             else jax.nn.silu(ge.astype(jnp.float32)).astype(hl.dtype))
+        u = jnp.einsum("ecd,edf->ecf", xe, wu)
+        ye = jnp.einsum("ecf,efd->ecd", a * u, wd)
+        ye = ye * gate[..., None].astype(ye.dtype)
+        part = jnp.zeros((Tl, d), ye.dtype).at[idx.reshape(-1)].add(
+            ye.reshape(E_loc * Cl, d))
+        return jax.lax.psum(part, "model").reshape(Bl, S, d)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(batch_spec, _mesh_spec((None, None)), w_spec, w_spec,
+                  wd_spec),
+        out_specs=batch_spec, check_vma=False)
+    out = fn(h, p["router"], p["wg"], p["wu"], p["wd"])
+    return constrain(out, rules, ("batch", "seq", "act_embed"))
+
+
+def moe_ec(p, x, cfg: ModelConfig, rules: ShardingRules):
+    """Expert-choice MoE (Zhou et al. 2022): each expert picks its top-C
+    tokens, C = T*k/E.  Static shapes, load-balanced by construction; the
+    expert dim shards over "model" (EP) when divisible, else the expert FFN
+    dim does.  FLOPs match token-choice top-k routing.
+
+    cfg.ec_groups > 1 enables *hierarchical* EC: experts choose per token
+    group (groups aligned with the DP lanes), so dispatch/combine gathers
+    stay group-local instead of all-gathering the global token stream.
+    cfg.moe_shmap (+ rules.mesh) switches to the explicit shard_map EP
+    path above."""
+    if (cfg.moe_shmap and rules.mesh is not None
+            and cfg.n_experts % dict(zip(rules.mesh.axis_names,
+                                         rules.mesh.devices.shape)
+                                     ).get("model", 1) == 0):
+        return moe_ec_shmap(p, x, cfg, rules)
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    G = max(1, cfg.ec_groups)
+    T = B * S
+    Tg = T // G
+    Cg = max(1, int(np.ceil(Tg * k * cfg.capacity_factor / E)))
+    if G == 1:
+        # round capacity up so the dim shards over the DP lanes, but never
+        # past the token count (decode steps have T ~ batch)
+        Cg = min(-(-Cg // 64) * 64, Tg)
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    h = constrain(h, rules, ("batch", "attn_seq", "act_embed"))
+    gax = "ec_groups" if G > 1 else None
+    cax = "expert_cap" if G == 1 else None
+    flat = h.reshape(G, Tg, d)
+    flat = constrain(flat, rules, (gax, None, "act_embed"))
+    logits = flat.astype(jnp.float32) @ p["router"]            # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(jnp.swapaxes(probs, 1, 2), Cg)   # (G, E, Cg)
+    xe = jnp.take_along_axis(flat[:, None], idx[..., None], axis=2)
+    xe = constrain(xe, rules, (gax, "experts", cax, "act_embed"))
+    ge = jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+    a = (jax.nn.silu(ge) if cfg.ffn_mixed
+         else jax.nn.silu(ge.astype(jnp.float32)).astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    ye = jnp.einsum("gecf,efd->gecd", a * u, p["wd"])          # (G,E,Cg,d)
+    ye = constrain(ye, rules, (gax, "experts", cax, "act_embed"))
+    ye = ye * gate[..., None].astype(ye.dtype)
+    garr = jnp.broadcast_to(jnp.arange(G)[:, None, None], idx.shape)
+    out = jnp.zeros((G, Tg, d), ye.dtype).at[garr, idx].add(ye)
+    out = constrain(out, rules, (gax, None, "act_embed"))
+    return constrain(out.reshape(B, S, d), rules, ("batch", "seq", "act_embed"))
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 SSD mixer
+# --------------------------------------------------------------------------
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.ssm_conv
+    return {
+        "wz": ParamDef((d, di), ("embed", "ssm_inner")),
+        "wx": ParamDef((d, di), ("embed", "ssm_inner")),
+        "wB": ParamDef((d, N), ("embed", None)),
+        "wC": ParamDef((d, N), ("embed", None)),
+        "wdt": ParamDef((d, H), ("embed", "ssm_heads")),
+        "conv_x_w": ParamDef((K, di), (None, "ssm_inner")),
+        "conv_x_b": ParamDef((di,), ("ssm_inner",), init="zeros"),
+        "conv_B_w": ParamDef((K, N), (None, None)),
+        "conv_B_b": ParamDef((N,), (None,), init="zeros"),
+        "conv_C_w": ParamDef((K, N), (None, None)),
+        "conv_C_b": ParamDef((N,), (None,), init="zeros"),
+        "a_log": ParamDef((H,), ("ssm_heads",), init="ssm_a",
+                          dtype=jnp.float32),
+        "d_skip": ParamDef((H,), ("ssm_heads",), init="ones",
+                           dtype=jnp.float32),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="dt_bias",
+                            dtype=jnp.float32),
+        "ssm_norm": ParamDef((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "embed")),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Chunked SSD recurrence (jnp path; kernels/ssd_scan mirrors this).
+    x: (B,L,H,P), dt: (B,L,H), A: (H,), Bm/Cm: (B,L,N).
+    Returns (y, final_state (B,H,N,P) f32)."""
+    Bt, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    nc = L // Q
+    xq = jnp.moveaxis(x.reshape(Bt, nc, Q, H, P), 1, 0)
+    dq = jnp.moveaxis(dt.reshape(Bt, nc, Q, H), 1, 0)
+    bq = jnp.moveaxis(Bm.reshape(Bt, nc, Q, N), 1, 0)
+    cq = jnp.moveaxis(Cm.reshape(Bt, nc, Q, N), 1, 0)
+    mask = jnp.asarray(np.arange(Q)[:, None] >= np.arange(Q)[None, :])
+
+    def step(state, inp):
+        xc, dc, bc, cc = inp
+        da = dc.astype(jnp.float32) * A                        # (Bt,Q,H)
+        cum = jnp.cumsum(da, axis=1)
+        total = cum[:, -1]                                     # (Bt,H)
+        scores = jnp.einsum("bqn,bkn->bqk", cc.astype(jnp.float32),
+                            bc.astype(jnp.float32))
+        # mask INSIDE the exp: masked entries (i < t) have positive exponents
+        # that overflow, and where(mask, inf, 0) NaNs in the VJP.
+        expnt = jnp.where(mask[None, :, :, None],
+                          cum[:, :, None, :] - cum[:, None, :, :], -1e30)
+        decay = jnp.exp(expnt)                                 # (Bt,Q,Q,H)
+        att = scores[..., None] * decay * dc[:, None, :, :].astype(jnp.float32)
+        y = jnp.einsum("bqkh,bkhp->bqhp", att, xc.astype(jnp.float32))
+        y += jnp.einsum("bqn,bhnp->bqhp", cc.astype(jnp.float32),
+                        state) * jnp.exp(cum)[..., None]
+        w = jnp.exp(total[:, None, :] - cum) * dc.astype(jnp.float32)
+        new_state = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bqn,bqh,bqhp->bhnp", bc.astype(jnp.float32), w,
+            xc.astype(jnp.float32))
+        return new_state, y.astype(x.dtype)
+
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bt, H, N, P), jnp.float32))
+    final, ys = jax.lax.scan(step, s0, (xq, dq, bq, cq))
+    return jnp.moveaxis(ys, 0, 1).reshape(Bt, L, H, P), final
+
+
+def _causal_conv(seq, w, b, conv_state=None):
+    """Depthwise causal conv1d. seq: (B,L,C), w: (K,C).  conv_state
+    (B,K-1,C) enables streaming decode; returns (out, new_state)."""
+    K = w.shape[0]
+    if conv_state is not None:
+        full = jnp.concatenate([conv_state.astype(seq.dtype), seq], axis=1)
+    else:
+        full = jnp.pad(seq, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(full[:, i:i + seq.shape[1], :] * w[i] for i in range(K))
+    new_state = full[:, full.shape[1] - (K - 1):, :] if K > 1 else None
+    return out + b, new_state
+
+
+def mamba2(p, x, cfg: ModelConfig, rules: ShardingRules, *, state=None,
+           interpret=True):
+    """Mamba-2 block.  state: None (train/prefill-from-zero) or dict with
+    ssm (B,H,N,P) f32 and conv_{x,B,C} streaming states.  Returns
+    (out, new_state)."""
+    B, S, _ = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    h = constrain(h, rules, ("batch", "attn_seq", "act_embed"))
+    z = h @ p["wz"]
+    xin = h @ p["wx"]
+    Bm = h @ p["wB"]
+    Cm = h @ p["wC"]
+    dt = h @ p["wdt"]
+    xin, cs_x = _causal_conv(xin, p["conv_x_w"], p["conv_x_b"],
+                             None if state is None else state["conv_x"])
+    Bm, cs_B = _causal_conv(Bm, p["conv_B_w"], p["conv_B_b"],
+                            None if state is None else state["conv_B"])
+    Cm, cs_C = _causal_conv(Cm, p["conv_C_w"], p["conv_C_b"],
+                            None if state is None else state["conv_C"])
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+    Bm = jax.nn.silu(Bm.astype(jnp.float32)).astype(x.dtype)
+    Cm = jax.nn.silu(Cm.astype(jnp.float32)).astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    xh = constrain(xin.reshape(B, S, H, P), rules,
+                   ("batch", "attn_seq", "ssm_heads", None))
+    if (cfg.use_pallas and state is None and S % cfg.ssm_chunk == 0
+            and S > 1):
+        from ..kernels.ops import ssd_scan
+        y = ssd_scan(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk,
+                     interpret=interpret)
+        new_ssm = None                      # kernel path is train-only
+    else:
+        y, new_ssm = ssd_chunked(xh, dt, A, Bm, Cm,
+                                 chunk=min(cfg.ssm_chunk, S),
+                                 initial_state=None if state is None
+                                 else state["ssm"])
+    y = y + xh.astype(y.dtype) * p["d_skip"][:, None].astype(y.dtype)
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["ssm_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    out = constrain(out, rules, ("batch", "seq", "act_embed"))
+    new_state = None
+    if state is not None:
+        new_state = {"ssm": new_ssm, "conv_x": cs_x, "conv_B": cs_B,
+                     "conv_C": cs_C}
+    return out, new_state

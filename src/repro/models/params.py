@@ -1,0 +1,84 @@
+"""Parameter definition trees: one source of truth for shapes, logical
+sharding axes, and initializers.
+
+`defs` trees (nested dicts of ParamDef) are transformed into:
+  * init_params(key)        — materialized pytree (smoke tests, train.py)
+  * param_shapes()          — ShapeDtypeStructs (dry-run: zero allocation)
+  * param_specs(rules)      — PartitionSpec pytree for pjit in_shardings
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                      # logical axis names (len == ndim)
+    init: str = "normal"             # normal|zeros|ones|ssm_a|dt_bias
+    scale: Optional[float] = None    # None -> 1/sqrt(fan_in)
+    dtype: Optional[object] = None   # overrides model dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _leaf_map(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_def)
+
+
+def init_params(defs, key, dtype):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = d.dtype or dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        elif d.init == "ssm_a":
+            # A = -exp(uniform log-space): standard Mamba-2 init, f32
+            out.append(-jnp.exp(jax.random.uniform(
+                k, d.shape, jnp.float32, np.log(1.0), np.log(16.0))))
+        elif d.init == "dt_bias":
+            # softplus^{-1} of dt ~ U[1e-3, 1e-1]
+            u = jax.random.uniform(k, d.shape, jnp.float32, 1e-3, 1e-1)
+            out.append(jnp.log(jnp.expm1(u)))
+        else:
+            fan_in = d.shape[0] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else fan_in ** -0.5
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_shapes(defs, dtype):
+    return _leaf_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype), defs)
+
+
+def param_specs(defs, rules):
+    return _leaf_map(lambda d: rules.spec(d.axes), defs)
+
+
+def stack(defs, n: int, axis_name: str = "layers"):
+    """Add a leading stacking dim (scan-over-layers parameter layout)."""
+    return _leaf_map(
+        lambda d: dataclasses.replace(
+            d, shape=(n,) + d.shape, axes=(axis_name,) + d.axes), defs)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)

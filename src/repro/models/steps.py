@@ -1,0 +1,84 @@
+"""Train / serve step factories: loss, grad, optimizer update, decode.
+
+These are the functions the launcher jits (and the dry-run lowers) — they
+close over config + sharding rules and take only arrays.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import clip_by_global_norm, make_optimizer
+from ..parallel.sharding import ShardingRules
+from .config import ModelConfig
+from . import transformer as T
+
+
+def lm_loss(logits, labels, vocab_size: int):
+    """Cross-entropy with padded-vocab masking.  labels: (B,S) int32;
+    positions with label < 0 are ignored."""
+    lf = logits.astype(jnp.float32)
+    Vp = lf.shape[-1]
+    if Vp > vocab_size:
+        pad_mask = jnp.arange(Vp) >= vocab_size
+        lf = jnp.where(pad_mask, -1e30, lf)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    safe_labels = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(lf, safe_labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, rules: ShardingRules, *, mesh_tp=16,
+                 interpret=True):
+    def loss_fn(params, batch):
+        logits = T.forward(params, batch, cfg, rules, mesh_tp=mesh_tp,
+                           interpret=interpret)
+        return lm_loss(logits, batch["labels"], cfg.vocab_size)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, rules: ShardingRules, *, lr=3e-4,
+                    max_grad_norm=1.0, mesh_tp=16, interpret=True):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {params, opt, step}.  Gradient clipping by global norm; the
+    optimizer is per-config (adamw / adafactor).
+    """
+    opt = make_optimizer(cfg.optimizer, lr=lr)
+    loss_fn = make_loss_fn(cfg, rules, mesh_tp=mesh_tp, interpret=interpret)
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = opt.update(grads, state["opt"], state["params"])
+        return (
+            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            {"loss": loss, "grad_norm": gnorm},
+        )
+
+    return train_step, opt
+
+
+def make_serve_step(cfg: ModelConfig, rules: ShardingRules, *, mesh_tp=16,
+                    interpret=True):
+    """Returns decode_step(params, cache, tokens, pos) -> (logits, cache)."""
+    def serve_step(params, cache, tokens, pos):
+        return T.decode_step(params, cache, tokens, pos, cfg, rules,
+                             mesh_tp=mesh_tp, interpret=interpret)
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, rules: ShardingRules, *, mesh_tp=16,
+                 interpret=True):
+    """Full-sequence prefill: logits over the prompt (cache fill elided for
+    the dry-run cells — prefill cost is the forward pass)."""
+    def prefill(params, batch):
+        return T.forward(params, batch, cfg, rules, mesh_tp=mesh_tp,
+                         interpret=interpret)
+
+    return prefill

@@ -1,0 +1,385 @@
+"""Model assembly for the architecture zoo.
+
+Families
+  dense / moe / vlm : uniform decoder blocks, scan-over-layers
+  ssm (mamba2)      : uniform Mamba-2 blocks, scan-over-layers
+  hybrid (jamba)    : scan over super-blocks of `attn_every` layers
+                      (1 attention + attn_every-1 mamba, MoE every 2nd FFN)
+  encdec (whisper)  : scanned encoder blocks + scanned decoder blocks with
+                      cross-attention; audio frontend is a stub (the input
+                      is precomputed frame embeddings)
+
+All parameters are stacked along a leading "layers" axis so the whole stack
+lowers as one `lax.scan` (compile-time O(1) in depth) with optional full
+remat.  VLM: the token embedding's first n_patches positions are overwritten
+by precomputed patch embeddings (frontend stub per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import ShardingRules, constrain
+from . import layers as L
+from .config import ModelConfig
+from .params import ParamDef, stack
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return int(np.ceil(cfg.vocab_size / 128)) * 128
+
+
+def head_pad_for(cfg: ModelConfig, tp: int = 16) -> int:
+    """Runtime head padding multiple so attention shards on a tp-way mesh."""
+    return tp if cfg.n_heads % tp else 1
+
+
+# --------------------------------------------------------------------------
+# block definitions
+# --------------------------------------------------------------------------
+
+def _decoder_block_defs(cfg: ModelConfig, moe: bool) -> dict:
+    d = {"attn": L.attn_defs(cfg)}
+    d["ffn"] = L.moe_defs(cfg) if moe else L.mlp_defs(cfg)
+    return d
+
+
+def _ssm_block_defs(cfg: ModelConfig) -> dict:
+    return {"mamba": L.mamba_defs(cfg)}
+
+
+def _hybrid_superblock_defs(cfg: ModelConfig) -> dict:
+    k = cfg.attn_every
+    n_moe = k // cfg.moe_every
+    return {
+        "mamba": stack(L.mamba_defs(cfg), k - 1),
+        "attn": L.attn_defs(cfg),
+        "mlp": stack(L.mlp_defs(cfg), k - n_moe),
+        "moe": stack(L.moe_defs(cfg), n_moe),
+    }
+
+
+def _encdec_block_defs(cfg: ModelConfig, cross: bool) -> dict:
+    d = {"attn": L.attn_defs(cfg), "ffn": L.mlp_defs(cfg)}
+    if cross:
+        d["xattn"] = L.attn_defs(cfg)
+    return d
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    V = padded_vocab(cfg)
+    d = cfg.d_model
+    defs: dict[str, Any] = {
+        "embed": ParamDef((V, d), ("vocab", "embed"), scale=d ** -0.5),
+        "final_norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((d, V), ("embed", "vocab"))
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        defs["blocks"] = stack(
+            _decoder_block_defs(cfg, moe=cfg.n_experts > 0), cfg.n_layers)
+    elif fam == "ssm":
+        defs["blocks"] = stack(_ssm_block_defs(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        defs["blocks"] = stack(_hybrid_superblock_defs(cfg), n_super)
+    elif fam == "encdec":
+        defs["enc_blocks"] = stack(_encdec_block_defs(cfg, cross=False),
+                                   cfg.n_enc_layers)
+        defs["blocks"] = stack(_encdec_block_defs(cfg, cross=True),
+                               cfg.n_layers)
+        defs["enc_norm"] = ParamDef((d,), ("embed",), init="ones")
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return defs
+
+
+# --------------------------------------------------------------------------
+# block application
+# --------------------------------------------------------------------------
+
+def _apply_decoder_block(p, x, cfg, rules, *, positions, cache=None,
+                         head_pad=1, interpret=True, kv_src=None,
+                         causal=True):
+    a, new_cache = L.attention(p["attn"], x, cfg, rules, positions=positions,
+                               causal=causal, cache=cache, head_pad=head_pad,
+                               interpret=interpret, kv_src=None)
+    x = x + a
+    if kv_src is not None:                    # cross-attention sub-layer
+        xa, _ = L.attention(p["xattn"], x, cfg, rules, positions=positions,
+                            causal=False, kv_src=kv_src, head_pad=head_pad,
+                            interpret=interpret)
+        x = x + xa
+    ffn = L.moe_ec if cfg.n_experts and "router" in p["ffn"] else L.mlp
+    x = x + ffn(p["ffn"], x, cfg, rules)
+    return x, new_cache
+
+
+def _apply_ssm_block(p, x, cfg, rules, *, state=None, interpret=True):
+    m, new_state = L.mamba2(p["mamba"], x, cfg, rules, state=state,
+                            interpret=interpret)
+    return x + m, new_state
+
+
+def _apply_hybrid_superblock(p, x, cfg, rules, *, positions, caches=None,
+                             head_pad=1, interpret=True):
+    """attn_every layers: attention in the middle, mamba elsewhere; FFN after
+    every mixer — MoE on odd layer indices, dense MLP on even."""
+    k = cfg.attn_every
+    attn_pos = k // 2
+    new_caches = {"attn": None, "mamba": [], }
+    mi = di = oi = 0
+    for i in range(k):
+        if i == attn_pos:
+            a, nc = L.attention(
+                p["attn"], x, cfg, rules, positions=positions,
+                cache=None if caches is None else caches["attn"],
+                head_pad=head_pad, interpret=interpret)
+            x = x + a
+            new_caches["attn"] = nc
+        else:
+            st = None if caches is None else jax.tree.map(
+                lambda s: s[mi], caches["mamba"])
+            m, ns = L.mamba2(jax.tree.map(lambda q: q[mi], p["mamba"]),
+                             x, cfg, rules, state=st, interpret=interpret)
+            x = x + m
+            new_caches["mamba"].append(ns)
+            mi += 1
+        if cfg.is_moe_layer(i):
+            x = x + L.moe_ec(jax.tree.map(lambda q: q[oi], p["moe"]),
+                             x, cfg, rules)
+            oi += 1
+        else:
+            x = x + L.mlp(jax.tree.map(lambda q: q[di], p["mlp"]),
+                          x, cfg, rules)
+            di += 1
+    if caches is not None:
+        new_caches["mamba"] = jax.tree.map(
+            lambda *s: jnp.stack(s), *new_caches["mamba"])
+    return x, new_caches
+
+
+# --------------------------------------------------------------------------
+# forward (training / prefill-style full-sequence pass)
+# --------------------------------------------------------------------------
+
+def _scan_blocks(blocks, x, body, remat):
+    def f(carry, lp):
+        return body(lp, carry), None
+
+    if remat == "full" or remat is True:
+        f = jax.checkpoint(f, prevent_cse=False)
+    elif remat == "nothing":
+        # save ONLY the bf16 carry between layers: no f32 intermediates
+        # may escape the remat boundary (they get recomputed in backward)
+        f = jax.checkpoint(
+            f, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+    elif remat == "dots":
+        # selective remat: save matmul outputs (skips re-reading weights in
+        # the backward recompute — the MoE lever, where expert weights are
+        # the dominant stream), recompute the cheap elementwise chains
+        f = jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots,
+            prevent_cse=False)
+    x, _ = jax.lax.scan(f, x, blocks)
+    return x
+
+
+def embed_tokens(params, tokens, cfg, rules):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    return constrain(x, rules, ("batch", "seq", "act_embed"))
+
+
+def lm_head(params, x, cfg, rules):
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    W = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ W.astype(x.dtype)
+    return constrain(logits, rules, ("batch", "logits_seq", "vocab"))
+
+
+def forward(params, batch, cfg: ModelConfig, rules: ShardingRules, *,
+            mesh_tp: int = 16, interpret: bool = True):
+    """Full-sequence forward -> logits (B, S, V_padded).
+
+    batch: tokens (B,S) int32; vlm adds patches (B,n_patches,d);
+    encdec adds frames (B,enc_frames,d)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg, rules)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(cfg.dtype)
+        x = jax.lax.dynamic_update_slice(x, patches, (0, 0, 0))
+    positions = jnp.arange(S, dtype=jnp.int32)
+    hp = head_pad_for(cfg, mesh_tp)
+    remat = cfg.remat if cfg.remat != "none" else False
+
+    if cfg.family == "encdec":
+        frames = batch["frames"].astype(cfg.dtype)
+        fpos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+        enc = _scan_blocks(
+            params["enc_blocks"], frames,
+            lambda lp, h: _apply_decoder_block(
+                lp, h, cfg, rules, positions=fpos, causal=False,
+                head_pad=hp, interpret=interpret)[0],
+            remat)
+        enc = L.rmsnorm(enc, params["enc_norm"], cfg.norm_eps)
+        x = _scan_blocks(
+            params["blocks"], x,
+            lambda lp, h: _apply_decoder_block(
+                lp, h, cfg, rules, positions=positions, kv_src=enc,
+                head_pad=hp, interpret=interpret)[0],
+            remat)
+    elif cfg.family == "ssm":
+        x = _scan_blocks(
+            params["blocks"], x,
+            lambda lp, h: _apply_ssm_block(lp, h, cfg, rules,
+                                           interpret=interpret)[0],
+            remat)
+    elif cfg.family == "hybrid":
+        x = _scan_blocks(
+            params["blocks"], x,
+            lambda lp, h: _apply_hybrid_superblock(
+                lp, h, cfg, rules, positions=positions, head_pad=hp,
+                interpret=interpret)[0],
+            remat)
+    else:
+        x = _scan_blocks(
+            params["blocks"], x,
+            lambda lp, h: _apply_decoder_block(
+                lp, h, cfg, rules, positions=positions, head_pad=hp,
+                interpret=interpret)[0],
+            remat)
+    return lm_head(params, x, cfg, rules)
+
+
+# --------------------------------------------------------------------------
+# KV / state caches for decode
+# --------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """ParamDef tree for the decode cache (shapes + logical sharding)."""
+    Hkv, D = cfg.n_kv_heads, cfg.hd
+    if cfg.kv_quant:
+        kv = lambda: {
+            "q8": ParamDef((batch, max_len, Hkv, D),
+                           ("batch", "cache_seq", None, None), init="zeros",
+                           dtype=jnp.int8),
+            "scale": ParamDef((batch, max_len, Hkv, 1),
+                              ("batch", "cache_seq", None, None),
+                              init="zeros", dtype=jnp.float32),
+        }
+    else:
+        kv = lambda: ParamDef((batch, max_len, Hkv, D),
+                              ("batch", "cache_seq", None, None),
+                              init="zeros")
+    di, N, H, P, K = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_head_dim, cfg.ssm_conv)
+    ssm = lambda: {
+        "ssm": ParamDef((batch, H, N, P), ("batch", "ssm_heads", None, None),
+                        init="zeros", dtype=jnp.float32),
+        "conv_x": ParamDef((batch, K - 1, di), ("batch", None, "ssm_inner"),
+                           init="zeros"),
+        "conv_B": ParamDef((batch, K - 1, N), ("batch", None, None),
+                           init="zeros"),
+        "conv_C": ParamDef((batch, K - 1, N), ("batch", None, None),
+                           init="zeros"),
+    }
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return {"k": stack(kv(), cfg.n_layers), "v": stack(kv(), cfg.n_layers)}
+    if fam == "ssm":
+        return stack(ssm(), cfg.n_layers)
+    if fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        return {
+            "attn_k": stack(kv(), n_super),
+            "attn_v": stack(kv(), n_super),
+            "mamba": stack(stack(ssm(), cfg.attn_every - 1, "layers"),
+                           n_super),
+        }
+    if fam == "encdec":
+        return {
+            "k": stack(kv(), cfg.n_layers),
+            "v": stack(kv(), cfg.n_layers),
+            "enc_out": ParamDef((batch, cfg.enc_frames, cfg.d_model),
+                                ("batch", "frames", "act_embed"), init="zeros"),
+        }
+    raise ValueError(fam)
+
+
+# --------------------------------------------------------------------------
+# single-token decode step
+# --------------------------------------------------------------------------
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
+                rules: ShardingRules, *, mesh_tp: int = 16,
+                interpret: bool = True):
+    """One decode step.  tokens: (B, 1); pos: scalar int32 (cache fill).
+    Returns (logits (B, 1, V), new_cache)."""
+    B = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg, rules)
+    positions = jnp.full((1,), pos, jnp.int32)
+    hp = head_pad_for(cfg, mesh_tp)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def f(carry, xs):
+            h = carry
+            lp, ck, cv = xs
+            h, nc = _apply_decoder_block(
+                lp, h, cfg, rules, positions=positions,
+                cache={"k": ck, "v": cv, "len": pos}, head_pad=hp,
+                interpret=interpret)
+            return h, (nc["k"], nc["v"])
+
+        x, (nk, nv) = jax.lax.scan(f, x, (params["blocks"], cache["k"],
+                                          cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+    elif fam == "ssm":
+        def f(carry, xs):
+            h = carry
+            lp, st = xs
+            h, ns = _apply_ssm_block(lp, h, cfg, rules, state=st,
+                                     interpret=interpret)
+            return h, ns
+
+        x, new_cache = jax.lax.scan(f, x, (params["blocks"], cache))
+    elif fam == "hybrid":
+        def f(carry, xs):
+            h = carry
+            lp, ck, cv, mst = xs
+            caches = {"attn": {"k": ck, "v": cv, "len": pos}, "mamba": mst}
+            h, nc = _apply_hybrid_superblock(
+                lp, h, cfg, rules, positions=positions, caches=caches,
+                head_pad=hp, interpret=interpret)
+            return h, (nc["attn"]["k"], nc["attn"]["v"], nc["mamba"])
+
+        x, (nk, nv, nm) = jax.lax.scan(
+            f, x, (params["blocks"], cache["attn_k"], cache["attn_v"],
+                   cache["mamba"]))
+        new_cache = {"attn_k": nk, "attn_v": nv, "mamba": nm}
+    elif fam == "encdec":
+        enc = cache["enc_out"].astype(cfg.dtype)
+
+        def f(carry, xs):
+            h = carry
+            lp, ck, cv = xs
+            h, nc = _apply_decoder_block(
+                lp, h, cfg, rules, positions=positions,
+                cache={"k": ck, "v": cv, "len": pos}, kv_src=enc,
+                head_pad=hp, interpret=interpret)
+            return h, (nc["k"], nc["v"])
+
+        x, (nk, nv) = jax.lax.scan(f, x, (params["blocks"], cache["k"],
+                                          cache["v"]))
+        new_cache = {"k": nk, "v": nv, "enc_out": cache["enc_out"]}
+    else:
+        raise ValueError(fam)
+    logits = lm_head(params, x, cfg, rules)
+    return logits, new_cache

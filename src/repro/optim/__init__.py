@@ -1,0 +1,8 @@
+from .optimizers import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, make_optimizer,
+                         opt_state_specs)
+from .compress import compress_int8, decompress_int8, error_feedback_step
+
+__all__ = ["adafactor_init", "adafactor_update", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "make_optimizer", "opt_state_specs",
+           "compress_int8", "decompress_int8", "error_feedback_step"]

@@ -1,0 +1,44 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantized gradient representation for bandwidth-limited reduction
+tiers (the DCN "pod" axis at multi-pod scale): gradients are quantized to
+int8 with a per-block f32 scale before crossing the slow link, and the
+quantization residual is carried into the next step (error feedback), which
+keeps SGD-style convergence guarantees.
+
+The train loop applies this on the pod tier only (ICI all-reduce stays
+bf16): see launch/train.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def compress_int8(x: jax.Array):
+    """-> (q int8[N], scale f32[N/BLOCK]).  Pads to BLOCK internally."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def error_feedback_step(grad, residual):
+    """Quantize (grad + residual); return (dequantized grad, new residual)."""
+    target = grad.astype(jnp.float32) + residual
+    q, scale = compress_int8(target)
+    deq = decompress_int8(q, scale, grad.shape)
+    return deq.astype(grad.dtype), target - deq

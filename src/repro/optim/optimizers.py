@@ -1,0 +1,151 @@
+"""Optimizers with sharding-aware state trees.
+
+AdamW for the <30B archs; Adafactor (factored second moment, no first
+moment) for the >=300B archs, where full Adam state would exceed the v5e
+HBM budget even fully sharded — the per-arch choice is recorded in each
+config.  State trees mirror the parameter tree structure so `opt_state_specs`
+can derive PartitionSpecs from the model's ParamDefs (ZeRO-style: states
+shard exactly like their parameters).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import params as P
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    c = state["count"] + 1
+    cf = c.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mh = m / (1 - b1 ** cf)
+        vh = v / (1 - b2 ** cf)
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "count": c}
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment over the last two dims; no momentum)
+# --------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    def vr(p):   # row stats: reduce over the last dim
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    def vc(p):   # col stats: reduce over the second-to-last dim
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+    return {"vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, *, lr, decay=0.8, eps=1e-30,
+                     weight_decay=0.0, clip_threshold=1.0):
+    c = state["count"] + 1
+    beta = 1.0 - c.astype(jnp.float32) ** (-decay)
+
+    def upd(g, vr, vc, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p):
+            vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            u = gf / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                      + eps)
+        else:
+            vr = beta * vr + (1 - beta) * g2
+            u = gf / (jnp.sqrt(vr) + eps)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        step = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, grads, state["vr"], state["vc"], params)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"vr": pick(1), "vc": pick(2), "count": c}
+
+
+# --------------------------------------------------------------------------
+# spec derivation + factory
+# --------------------------------------------------------------------------
+
+def opt_state_specs(defs, rules, optimizer: str):
+    """PartitionSpec tree for the optimizer state, derived from ParamDefs."""
+    from jax.sharding import PartitionSpec as PS
+
+    if optimizer == "adamw":
+        s = P.param_specs(defs, rules)
+        return {"m": s, "v": s, "count": PS()}
+    if optimizer == "adafactor":
+        def vr_spec(d):
+            axes = d.axes[:-1] if len(d.shape) >= 2 else d.axes
+            return rules.spec(axes)
+
+        def vc_spec(d):
+            axes = (d.axes[:-2] + d.axes[-1:]) if len(d.shape) >= 2 else (None,)
+            return rules.spec(axes)
+
+        lm = lambda fn: jax.tree.map(fn, defs, is_leaf=P.is_def)
+        return {"vr": lm(vr_spec), "vc": lm(vc_spec), "count": PS()}
+    raise ValueError(optimizer)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: callable
+    update: callable
+
+
+def make_optimizer(name: str, lr: float = 3e-4, **kw) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(name, adamw_init,
+                         functools.partial(adamw_update, lr=lr, **kw))
+    if name == "adafactor":
+        return Optimizer(name, adafactor_init,
+                         functools.partial(adafactor_update, lr=lr, **kw))
+    raise ValueError(name)

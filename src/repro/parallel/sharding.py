@@ -1,0 +1,102 @@
+"""Logical-axis sharding rules -> physical PartitionSpecs.
+
+Every parameter / activation in the model zoo is annotated with *logical*
+axis names; a rule table maps those to mesh axes.  Swapping rule tables is
+how the §Perf hillclimb changes sharding without touching model code.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --- canonical rule tables ---------------------------------------------------
+
+# Baseline: DP over (pod, data), TP over model; parameters replicated over
+# the data axis (classic Megatron DP+TP), batch sharded.
+RULES_DP_TP: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,             # residual stream between blocks
+    "attn_seq": None,        # seq dim inside mixers (never model-sharded:
+                             # SP all-gathers in, heads take over inside)
+    "cache_seq": "model",    # decode KV cache: context parallelism
+    "act_embed": None,       # activation feature dim (params use "embed")
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "decode_heads": None,    # repeated KV heads during decode: the cache's
+                             # seq dim owns "model" (context parallelism)
+    "qdim": "model",
+    "vocab": "model",
+    "logits_seq": None,      # seq dim of logits (vocab owns "model")
+    "experts": "model",
+    "expert_cap": "data",    # EC capacity dim: DP lanes split expert tokens
+    "ec_groups": "data",     # hierarchical EC: token groups = DP lanes
+    "expert_mlp": None,
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "layers": None,
+    "frames": None,
+}
+
+# FSDP(ZeRO-3) + TP: parameters/optimizer states additionally sharded over
+# the data axis on their "embed" dim; gathered per-layer inside the scan.
+RULES_FSDP_TP = dict(RULES_DP_TP, embed="data")
+
+# FSDP + TP + SP: the sequence dim of the residual stream is sharded over
+# "model" between blocks (Megatron-SP: all-gather in, reduce-scatter out).
+RULES_FSDP_TP_SP = dict(RULES_FSDP_TP, seq="model")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    table: Mapping[str, object]
+    mesh: object = None      # optional: set by the launcher so layers can
+                             # open explicit shard_map regions
+
+    def with_overrides(self, overrides) -> "ShardingRules":
+        t = dict(self.table)
+        t.update(dict(overrides))
+        return ShardingRules(t, self.mesh)
+
+    def with_mesh(self, mesh) -> "ShardingRules":
+        return ShardingRules(self.table, mesh)
+
+    def spec(self, logical_axes: Sequence[str | None]) -> P:
+        phys = []
+        for ax in logical_axes:
+            if ax is None:
+                phys.append(None)
+            elif ax not in self.table:
+                raise KeyError(f"unknown logical axis {ax!r}")
+            else:
+                phys.append(self.table[ax])
+        return P(*phys)
+
+    def sharding(self, mesh: Mesh, logical_axes: Sequence[str | None]):
+        return NamedSharding(mesh, self.spec(logical_axes))
+
+
+def constrain(x, rules: ShardingRules, logical_axes):
+    """with_sharding_constraint by logical axes (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(logical_axes))
+    except (ValueError, RuntimeError):
+        return x
+
+
+BASELINE_RULES = ShardingRules(RULES_DP_TP)
+DEFAULT_RULES = ShardingRules(RULES_FSDP_TP)
+SP_RULES = ShardingRules(RULES_FSDP_TP_SP)
+
+
+def rules_by_name(name: str) -> ShardingRules:
+    return {
+        "dp_tp": BASELINE_RULES,
+        "fsdp_tp": DEFAULT_RULES,
+        "fsdp_tp_sp": SP_RULES,
+    }[name]

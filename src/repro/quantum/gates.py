@@ -1,0 +1,135 @@
+"""Gate set and opcode table for the MPI-Q waveform tape IR.
+
+The paper ships "device-ready waveform data" from the classical controller to
+quantum MonitorProcesses.  Our TPU-native analogue is a dense *tape*: integer
+opcodes + qubit indices + float params.  This module defines the opcode
+vocabulary and the 2x2 unitary factory used by the tape interpreter.
+
+Opcodes >= CTRL_BASE are controlled versions of (opcode - CTRL_BASE)'s
+single-qubit unitary, e.g. CNOT = controlled X.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# --- opcode vocabulary (stable ABI: serialized into waveform payloads) ------
+NOP = 0      # identity / tape padding
+H = 1
+X = 2
+Y = 3
+Z = 4
+S = 5
+SDG = 6
+T = 7
+TDG = 8
+RX = 9
+RY = 10
+RZ = 11
+PHASE = 12   # diag(1, e^{i theta})
+
+CTRL_BASE = 16
+CX = CTRL_BASE + X    # 18  (CNOT)
+CZ = CTRL_BASE + Z    # 20
+CRZ = CTRL_BASE + RZ  # 27
+CPHASE = CTRL_BASE + PHASE  # 28
+
+N_BASE_OPS = 13  # NOP..PHASE
+
+_SQ2 = 1.0 / np.sqrt(2.0)
+
+OP_NAMES = {
+    NOP: "nop", H: "h", X: "x", Y: "y", Z: "z", S: "s", SDG: "sdg",
+    T: "t", TDG: "tdg", RX: "rx", RY: "ry", RZ: "rz", PHASE: "phase",
+    CX: "cx", CZ: "cz", CRZ: "crz", CPHASE: "cphase",
+}
+
+
+def is_controlled(opcode: int) -> bool:
+    return opcode >= CTRL_BASE
+
+
+def base_opcode(opcode: int) -> int:
+    return opcode - CTRL_BASE if opcode >= CTRL_BASE else opcode
+
+
+def gate_matrix_fns(dtype=jnp.complex64):
+    """Return a tuple of `theta -> (2,2) unitary` fns indexed by base opcode.
+
+    Used as the branch table of a `lax.switch` inside the jitted tape
+    interpreter, so every branch has signature (theta: f32) -> (2,2) complex.
+    """
+    c = lambda m: jnp.asarray(m, dtype=dtype)
+
+    def _const(m):
+        mat = c(m)
+        return lambda theta: mat
+
+    def _rx(theta):
+        ct, st = jnp.cos(theta / 2), jnp.sin(theta / 2)
+        return jnp.array([[ct, -1j * st], [-1j * st, ct]], dtype=dtype)
+
+    def _ry(theta):
+        ct, st = jnp.cos(theta / 2), jnp.sin(theta / 2)
+        return jnp.array([[ct, -st], [st, ct]], dtype=dtype)
+
+    def _rz(theta):
+        e = jnp.exp(-0.5j * theta.astype(jnp.complex64))
+        return jnp.array([[e, 0], [0, jnp.conj(e)]], dtype=dtype)
+
+    def _phase(theta):
+        return jnp.array(
+            [[1, 0], [0, jnp.exp(1j * theta.astype(jnp.complex64))]], dtype=dtype
+        )
+
+    return (
+        _const(np.eye(2)),                                  # NOP
+        _const(np.array([[_SQ2, _SQ2], [_SQ2, -_SQ2]])),    # H
+        _const(np.array([[0, 1], [1, 0]])),                 # X
+        _const(np.array([[0, -1j], [1j, 0]])),              # Y
+        _const(np.array([[1, 0], [0, -1]])),                # Z
+        _const(np.array([[1, 0], [0, 1j]])),                # S
+        _const(np.array([[1, 0], [0, -1j]])),               # SDG
+        _const(np.array([[1, 0], [0, np.exp(1j * np.pi / 4)]])),   # T
+        _const(np.array([[1, 0], [0, np.exp(-1j * np.pi / 4)]])),  # TDG
+        _rx,                                                # RX
+        _ry,                                                # RY
+        _rz,                                                # RZ
+        _phase,                                             # PHASE
+    )
+
+
+def gate_matrix_np(opcode: int, theta: float = 0.0) -> np.ndarray:
+    """Pure-numpy oracle for a base (non-controlled) opcode. Used by ref.py
+    oracles and tests — deliberately independent of the jax branch table."""
+    op = base_opcode(opcode)
+    if op == NOP:
+        return np.eye(2, dtype=np.complex64)
+    if op == H:
+        return np.array([[_SQ2, _SQ2], [_SQ2, -_SQ2]], dtype=np.complex64)
+    if op == X:
+        return np.array([[0, 1], [1, 0]], dtype=np.complex64)
+    if op == Y:
+        return np.array([[0, -1j], [1j, 0]], dtype=np.complex64)
+    if op == Z:
+        return np.array([[1, 0], [0, -1]], dtype=np.complex64)
+    if op == S:
+        return np.array([[1, 0], [0, 1j]], dtype=np.complex64)
+    if op == SDG:
+        return np.array([[1, 0], [0, -1j]], dtype=np.complex64)
+    if op == T:
+        return np.array([[1, 0], [0, np.exp(1j * np.pi / 4)]], dtype=np.complex64)
+    if op == TDG:
+        return np.array([[1, 0], [0, np.exp(-1j * np.pi / 4)]], dtype=np.complex64)
+    if op == RX:
+        ct, st = np.cos(theta / 2), np.sin(theta / 2)
+        return np.array([[ct, -1j * st], [-1j * st, ct]], dtype=np.complex64)
+    if op == RY:
+        ct, st = np.cos(theta / 2), np.sin(theta / 2)
+        return np.array([[ct, -st], [st, ct]], dtype=np.complex64)
+    if op == RZ:
+        e = np.exp(-0.5j * theta)
+        return np.array([[e, 0], [0, np.conj(e)]], dtype=np.complex64)
+    if op == PHASE:
+        return np.array([[1, 0], [0, np.exp(1j * theta)]], dtype=np.complex64)
+    raise ValueError(f"unknown opcode {opcode}")

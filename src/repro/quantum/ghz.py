@@ -1,0 +1,24 @@
+"""GHZ state preparation circuits (paper §5.1, Fig. 6)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .tape import CircuitBuilder, Tape
+
+
+def build_ghz_tape(n_qubits: int, min_len: int | None = None) -> Tape:
+    """H on qubit 0 followed by a CNOT ladder: depth scales linearly in n."""
+    b = CircuitBuilder(n_qubits)
+    b.h(0)
+    for i in range(n_qubits - 1):
+        b.cx(i, i + 1)
+    return b.build(min_len=min_len)
+
+
+def ghz_statevector(n_qubits: int) -> jnp.ndarray:
+    """Analytic |GHZ_n> = (|0...0> + |1...1>)/sqrt(2)."""
+    psi = np.zeros(2**n_qubits, np.complex64)
+    psi[0] = 1 / np.sqrt(2)
+    psi[-1] = 1 / np.sqrt(2)
+    return jnp.asarray(psi)

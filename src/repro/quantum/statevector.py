@@ -1,0 +1,154 @@
+"""JAX statevector simulator with a retrace-free tape interpreter.
+
+Two execution paths:
+
+  * `run_tape` — a single jitted interpreter `lax.scan`-ning over the tape
+    with *dynamic* qubit indices.  Compiles once per (n_qubits, tape_len);
+    any circuit of that shape then executes with zero recompilation.  This is
+    the MonitorProcess execution engine: the "control system" that consumes
+    pre-compiled waveform payloads (see quantum/tape.py).
+
+  * `run_tape_unrolled` — trace-time unrolled application (static qubit
+    indices), used where XLA should see the individual gates (fusion,
+    reference checks, and the Pallas fast path in kernels/apply_gate).
+
+State convention: little-endian — qubit q toggles bit q of the flat index,
+i.e. basis index i has qubit q in state (i >> q) & 1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gates
+from .tape import Tape
+
+
+def init_state(n_qubits: int, dtype=jnp.complex64) -> jax.Array:
+    psi = jnp.zeros((2**n_qubits,), dtype)
+    return psi.at[0].set(1.0)
+
+
+# --- dynamic-index gate application (interpreter path) ----------------------
+
+def apply_gate_dynamic(psi, mat, target, ctrl):
+    """Apply 2x2 `mat` on dynamic qubit `target`, optionally controlled on
+    dynamic qubit `ctrl` (ctrl < 0 => uncontrolled).  Pure gather/arith: no
+    dynamic reshapes, so it jits with traced indices."""
+    n = psi.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    bit = (idx >> target) & 1
+    partner = idx ^ (1 << target)
+    a = psi
+    b = psi[partner]
+    # bit==0 amplitude: m00*a + m01*b ; bit==1 amplitude: m10*b + m11*a
+    new = jnp.where(bit == 0, mat[0, 0] * a + mat[0, 1] * b,
+                    mat[1, 0] * b + mat[1, 1] * a)
+    active = jnp.where(ctrl >= 0, ((idx >> jnp.maximum(ctrl, 0)) & 1) == 1, True)
+    return jnp.where(active, new, psi)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _run_tape_jit(psi, opcodes, targets, ctrls, params):
+    branch_fns = gates.gate_matrix_fns(psi.dtype)
+
+    def step(psi, op):
+        opcode, tgt, ctl, theta = op
+        base = jnp.where(opcode >= gates.CTRL_BASE, opcode - gates.CTRL_BASE, opcode)
+        mat = jax.lax.switch(jnp.clip(base, 0, gates.N_BASE_OPS - 1), branch_fns, theta)
+        eff_ctrl = jnp.where(opcode >= gates.CTRL_BASE, ctl, -1)
+        return apply_gate_dynamic(psi, mat, tgt, eff_ctrl), None
+
+    psi, _ = jax.lax.scan(step, psi, (opcodes, targets, ctrls, params))
+    return psi
+
+
+def run_tape(psi: jax.Array, tape: Tape) -> jax.Array:
+    """Execute a waveform tape on `psi`.  Compiles once per shape."""
+    return _run_tape_jit(
+        psi,
+        jnp.asarray(tape.opcodes),
+        jnp.asarray(tape.qubits),
+        jnp.asarray(tape.ctrls),
+        jnp.asarray(tape.params),
+    )
+
+
+def simulate_tape(tape: Tape) -> jax.Array:
+    return run_tape(init_state(tape.n_qubits), tape)
+
+
+# --- static-index application (unrolled path) --------------------------------
+
+def apply_gate_static(psi, mat, target: int, ctrl: int = -1):
+    """Reshape-based application with *static* indices: exposes the gate as a
+    small einsum XLA can fuse.  psi viewed as (hi, 2, lo) with lo = 2^target."""
+    n = int(np.log2(psi.shape[0]))
+    lo = 2**target
+    hi = psi.shape[0] // (2 * lo)
+    v = psi.reshape(hi, 2, lo)
+    out = jnp.einsum("ab,hbl->hal", mat, v)
+    if ctrl >= 0:
+        cbit = (jnp.arange(psi.shape[0], dtype=jnp.int32) >> ctrl) & 1
+        out = jnp.where((cbit == 1).reshape(hi, 2, lo), out, v)
+    return out.reshape(psi.shape)
+
+
+def run_tape_unrolled(psi, tape: Tape):
+    for i in range(tape.length):
+        op = int(tape.opcodes[i])
+        if op == gates.NOP:
+            continue
+        mat = jnp.asarray(gates.gate_matrix_np(op, float(tape.params[i])))
+        ctrl = int(tape.ctrls[i]) if gates.is_controlled(op) else -1
+        psi = apply_gate_static(psi, mat, int(tape.qubits[i]), ctrl)
+    return psi
+
+
+# --- measurement -------------------------------------------------------------
+
+def probabilities(psi):
+    return jnp.real(psi * jnp.conj(psi))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def sample_bitstrings(psi, shots: int, key) -> jax.Array:
+    """Sample `shots` basis-state indices from |psi|^2."""
+    p = probabilities(psi)
+    logp = jnp.log(jnp.maximum(p, 1e-38))
+    return jax.random.categorical(key, logp, shape=(shots,))
+
+
+def counts_from_samples(samples: np.ndarray, n_qubits: int) -> dict[str, int]:
+    out: dict[str, int] = {}
+    vals, cnt = np.unique(np.asarray(samples), return_counts=True)
+    for v, c in zip(vals, cnt):
+        out[format(int(v), f"0{n_qubits}b")] = int(c)
+    return out
+
+
+def expval_pauli_z(psi, qubit: int) -> jax.Array:
+    """<Z_qubit>."""
+    n = psi.shape[0]
+    bit = (jnp.arange(n, dtype=jnp.int32) >> qubit) & 1
+    sign = 1.0 - 2.0 * bit.astype(jnp.float32)
+    return jnp.sum(sign * probabilities(psi))
+
+
+def expval_z_string(psi) -> jax.Array:
+    """<Z x Z x ... x Z> over all qubits (GHZ witness term)."""
+    n = psi.shape[0]
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    # parity of popcount
+    x = idx
+    x = x ^ (x >> 16); x = x ^ (x >> 8); x = x ^ (x >> 4)
+    x = x ^ (x >> 2); x = x ^ (x >> 1)
+    sign = 1.0 - 2.0 * (x & 1).astype(jnp.float32)
+    return jnp.sum(sign * probabilities(psi))
+
+
+def fidelity(psi, phi) -> jax.Array:
+    return jnp.abs(jnp.vdot(psi, phi)) ** 2

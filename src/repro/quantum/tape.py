@@ -1,0 +1,138 @@
+"""Waveform tape IR: the MPI-Q "device-ready waveform data" payload.
+
+A tape is a fixed-shape, fully dense encoding of a quantum circuit:
+
+    opcodes : int32[T]     gate opcode (gates.NOP pads the tail)
+    qubits  : int32[T]     target qubit
+    ctrls   : int32[T]     control qubit (-1 when the gate is uncontrolled)
+    params  : float32[T]   rotation angle (0 when unused)
+
+Fixed shapes are the point: the classical controller compiles the tape
+*once* (jax AOT `.lower().compile()`), ships the arrays to quantum
+MonitorProcesses as bytes, and nodes execute arbitrary circuits of
+length <= T with zero retracing — the paper's "no secondary compilation
+at the target node" property.
+
+Serialization is a versioned little-endian binary layout (no pickle) so the
+socket runtime can frame it directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+from . import gates
+
+_MAGIC = b"MPQW"  # MPi-Q Waveform
+_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Tape:
+    n_qubits: int
+    opcodes: np.ndarray   # int32[T]
+    qubits: np.ndarray    # int32[T]
+    ctrls: np.ndarray     # int32[T]
+    params: np.ndarray    # float32[T]
+
+    @property
+    def length(self) -> int:
+        return int(self.opcodes.shape[0])
+
+    @property
+    def n_gates(self) -> int:
+        return int((self.opcodes != gates.NOP).sum())
+
+    def padded(self, new_len: int) -> "Tape":
+        """Pad with NOPs to `new_len` (uniform tape shapes across nodes ->
+        one compiled executable serves every sub-circuit)."""
+        if new_len < self.length:
+            raise ValueError(f"cannot shrink tape {self.length} -> {new_len}")
+        pad = new_len - self.length
+        return Tape(
+            n_qubits=self.n_qubits,
+            opcodes=np.pad(self.opcodes, (0, pad)),
+            qubits=np.pad(self.qubits, (0, pad)),
+            ctrls=np.pad(self.ctrls, (0, pad), constant_values=-1),
+            params=np.pad(self.params, (0, pad)),
+        )
+
+    # --- wire format ------------------------------------------------------
+    def to_bytes(self) -> bytes:
+        head = struct.pack("<4sHHII", _MAGIC, _VERSION, 0, self.n_qubits, self.length)
+        return (
+            head
+            + self.opcodes.astype("<i4").tobytes()
+            + self.qubits.astype("<i4").tobytes()
+            + self.ctrls.astype("<i4").tobytes()
+            + self.params.astype("<f4").tobytes()
+        )
+
+    @staticmethod
+    def from_bytes(buf: bytes) -> "Tape":
+        magic, ver, _flags, n_qubits, length = struct.unpack_from("<4sHHII", buf, 0)
+        if magic != _MAGIC:
+            raise ValueError("bad waveform magic")
+        if ver != _VERSION:
+            raise ValueError(f"unsupported waveform version {ver}")
+        off = struct.calcsize("<4sHHII")
+        sz = 4 * length
+        opcodes = np.frombuffer(buf, "<i4", length, off).copy()
+        qubits = np.frombuffer(buf, "<i4", length, off + sz).copy()
+        ctrls = np.frombuffer(buf, "<i4", length, off + 2 * sz).copy()
+        params = np.frombuffer(buf, "<f4", length, off + 3 * sz).copy()
+        return Tape(n_qubits, opcodes, qubits, ctrls, params)
+
+
+class CircuitBuilder:
+    """Imperative circuit builder producing a Tape (the controller-side
+    'quantum compiler' front end)."""
+
+    def __init__(self, n_qubits: int):
+        if n_qubits < 1:
+            raise ValueError("need at least one qubit")
+        self.n_qubits = n_qubits
+        self._ops: list[tuple[int, int, int, float]] = []
+
+    def _push(self, opcode: int, q: int, c: int = -1, theta: float = 0.0):
+        for name, idx in (("target", q),) + ((("control", c),) if c >= 0 else ()):
+            if not (0 <= idx < self.n_qubits):
+                raise ValueError(f"{name} qubit {idx} out of range [0,{self.n_qubits})")
+        if c == q:
+            raise ValueError("control == target")
+        self._ops.append((opcode, q, c, float(theta)))
+        return self
+
+    # single-qubit
+    def h(self, q):  return self._push(gates.H, q)
+    def x(self, q):  return self._push(gates.X, q)
+    def y(self, q):  return self._push(gates.Y, q)
+    def z(self, q):  return self._push(gates.Z, q)
+    def s(self, q):  return self._push(gates.S, q)
+    def sdg(self, q): return self._push(gates.SDG, q)
+    def t(self, q):  return self._push(gates.T, q)
+    def tdg(self, q): return self._push(gates.TDG, q)
+    def rx(self, q, theta): return self._push(gates.RX, q, theta=theta)
+    def ry(self, q, theta): return self._push(gates.RY, q, theta=theta)
+    def rz(self, q, theta): return self._push(gates.RZ, q, theta=theta)
+    def phase(self, q, theta): return self._push(gates.PHASE, q, theta=theta)
+
+    # two-qubit (controlled)
+    def cx(self, c, t): return self._push(gates.CX, t, c)
+    cnot = cx
+    def cz(self, c, t): return self._push(gates.CZ, t, c)
+    def crz(self, c, t, theta): return self._push(gates.CRZ, t, c, theta)
+    def cphase(self, c, t, theta): return self._push(gates.CPHASE, t, c, theta)
+
+    def build(self, min_len: int | None = None) -> Tape:
+        n = len(self._ops)
+        length = max(n, min_len or 0)
+        opcodes = np.zeros(length, np.int32)
+        qubits = np.zeros(length, np.int32)
+        ctrls = np.full(length, -1, np.int32)
+        params = np.zeros(length, np.float32)
+        for i, (op, q, c, theta) in enumerate(self._ops):
+            opcodes[i], qubits[i], ctrls[i], params[i] = op, q, c, theta
+        return Tape(self.n_qubits, opcodes, qubits, ctrls, params)

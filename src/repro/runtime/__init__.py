@@ -1,0 +1,9 @@
+"""MPI-Q socket runtime: MonitorProcess daemons + classical controller.
+
+This is the cluster-native realization of the paper's library (the TPU-mesh
+realization lives in repro.core).  See protocol.py for the wire format.
+"""
+from .controller import Controller, Endpoint, NodeDied, TaskResult
+from .launcher import LocalCluster
+
+__all__ = ["Controller", "Endpoint", "NodeDied", "TaskResult", "LocalCluster"]

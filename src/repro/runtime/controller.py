@@ -1,0 +1,329 @@
+"""Classical controller: the user-side half of the MPI-Q socket runtime.
+
+Implements the paper's §4 verbs over the protocol, plus the large-scale
+operational substrate a real deployment needs:
+
+  * failure detection (heartbeats + socket timeouts) with automatic task
+    re-dispatch to surviving MonitorProcesses;
+  * straggler mitigation: duplicate-dispatch of tasks that exceed an
+    adaptive deadline, first result wins;
+  * task-ledger checkpoint/restart: completed sub-circuit results are
+    persisted; a restarted controller re-runs only the missing tasks;
+  * elastic scaling: MonitorProcesses can join/leave between task waves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import socket
+import struct
+import threading
+import time
+from typing import Sequence
+
+import numpy as np
+
+from ..core.domain import DeviceBinding
+from ..core.sync import align_clocks, BarrierResult
+from ..quantum.tape import Tape
+from . import protocol as pr
+
+
+@dataclasses.dataclass(frozen=True)
+class Endpoint:
+    ip: str
+    port: int
+    device_id: int
+
+    def binding(self) -> DeviceBinding:
+        return DeviceBinding(self.ip, self.device_id)
+
+
+EXPVAL = 0xFFFFFFFF
+
+
+@dataclasses.dataclass
+class TaskResult:
+    task_id: int
+    qrank: int
+    exec_ns: int          # node-side quantum execution time
+    wall_ns: int          # controller-observed round-trip
+    samples: np.ndarray
+    energy: float | None = None   # expval tasks
+
+
+class NodeDied(RuntimeError):
+    pass
+
+
+class _Conn:
+    """One synchronous request/response channel to a MonitorProcess."""
+
+    def __init__(self, ep: Endpoint, context_id: int, timeout: float):
+        self.ep = ep
+        self.context_id = context_id
+        self.timeout = timeout
+        self.lock = threading.Lock()
+        self.sock = socket.create_connection((ep.ip, ep.port), timeout=timeout)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    def rpc(self, msg_type: int, payload: bytes = b"", tag: int = 0,
+            timeout: float | None = None) -> pr.Frame:
+        with self.lock:
+            self.sock.settimeout(timeout or self.timeout)
+            pr.send_frame(self.sock, pr.Frame(
+                msg_type, self.context_id, tag, pr.CONTROLLER,
+                self.ep.device_id, payload))
+            return pr.recv_frame(self.sock)
+
+    def close(self):
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class Controller:
+    def __init__(self, endpoints: Sequence[Endpoint], context_id: int = 1,
+                 timeout: float = 60.0):
+        self.context_id = context_id
+        self.timeout = timeout
+        self.endpoints: dict[int, Endpoint] = dict(enumerate(endpoints))
+        self.conns: dict[int, _Conn] = {}
+        self.dead: set[int] = set()
+        self._next_qrank = len(self.endpoints)
+
+    # --- MPIQ_Init -----------------------------------------------------------
+    def mpiq_init(self) -> None:
+        for qrank, ep in list(self.endpoints.items()):
+            self._connect(qrank, ep)
+
+    def _connect(self, qrank: int, ep: Endpoint) -> None:
+        conn = _Conn(ep, self.context_id, self.timeout)
+        ack = conn.rpc(pr.HELLO, struct.pack("<i", qrank))
+        if ack.msg_type != pr.HELLO_ACK:
+            raise pr.ProtocolError(f"bad HELLO ack from qrank {qrank}")
+        self.conns[qrank] = conn
+
+    # --- elastic scaling -------------------------------------------------------
+    def add_node(self, ep: Endpoint) -> int:
+        qrank = self._next_qrank
+        self._next_qrank += 1
+        self.endpoints[qrank] = ep
+        self._connect(qrank, ep)
+        return qrank
+
+    def remove_node(self, qrank: int) -> None:
+        conn = self.conns.pop(qrank, None)
+        if conn is not None:
+            try:
+                pr.send_frame(conn.sock, pr.Frame(
+                    pr.LEAVE, self.context_id, 0, pr.CONTROLLER, qrank))
+            except OSError:
+                pass
+            conn.close()
+        self.endpoints.pop(qrank, None)
+
+    def alive_qranks(self) -> list[int]:
+        return [q for q in self.conns if q not in self.dead]
+
+    # --- point-to-point ---------------------------------------------------------
+    def mpiq_send(self, qrank: int, tape: Tape, shots: int,
+                  tag: int = 0, expval: tuple | None = None) -> TaskResult:
+        """MPIQ_Send of a waveform payload + MPIQ_Recv of the result (the
+        paper's complementary pair; synchronous round).  expval=(J, h)
+        requests a TFIM expectation value instead of samples."""
+        if expval is not None:
+            payload = (struct.pack("<Idd", EXPVAL, *expval)
+                       + tape.to_bytes())
+        else:
+            payload = struct.pack("<I", shots) + tape.to_bytes()
+        t0 = time.perf_counter_ns()
+        try:
+            reply = self.conns[qrank].rpc(pr.TASK, payload, tag=tag)
+        except (OSError, ConnectionError) as e:
+            self.dead.add(qrank)
+            raise NodeDied(f"qrank {qrank}: {e}") from e
+        wall = time.perf_counter_ns() - t0
+        if reply.msg_type == pr.ERROR:
+            raise RuntimeError(f"qrank {qrank}: {reply.payload.decode()}")
+        exec_ns, n = struct.unpack_from("<QI", reply.payload, 0)
+        if n == EXPVAL:
+            (energy,) = struct.unpack_from("<d", reply.payload, 12)
+            return TaskResult(tag, qrank, exec_ns, wall,
+                              np.empty(0, np.int64), energy=energy)
+        samples = np.frombuffer(reply.payload, "<i8", n, 12).copy()
+        return TaskResult(tag, qrank, exec_ns, wall, samples)
+
+    # --- heartbeats ----------------------------------------------------------------
+    def ping(self, qrank: int, timeout: float = 2.0) -> bool:
+        try:
+            return self.conns[qrank].rpc(
+                pr.PING, timeout=timeout).msg_type == pr.PONG
+        except (OSError, ConnectionError, KeyError):
+            self.dead.add(qrank)
+            return False
+
+    # --- hybrid barrier (QQ tier) ------------------------------------------------
+    def mpiq_barrier_qq(self, guard_ns: float = 100.0,
+                        tolerance_ns: float = 50.0) -> BarrierResult:
+        """Socket + clock alignment across all live MonitorProcesses."""
+        qranks = self.alive_qranks()
+        skews = np.zeros(len(qranks))
+        for i, q in enumerate(qranks):
+            v = self.conns[q].rpc(pr.CLOCK_PROBE)
+            (skews[i],) = struct.unpack("<d", v.payload)
+        res = align_clocks(skews, guard_ns=guard_ns, tolerance_ns=tolerance_ns)
+        aligned = np.zeros(len(qranks))
+        for i, q in enumerate(qranks):
+            ack = self.conns[q].rpc(pr.CLOCK_SET,
+                                    struct.pack("<d", res.compensation_ns[i]))
+            (aligned[i],) = struct.unpack("<d", ack.payload)
+        # verify every node's (skew + compensation) agrees on the trigger
+        residual = float(np.abs(aligned - res.trigger_ns).max())
+        for q in qranks:
+            self.conns[q].rpc(pr.BARRIER)
+        return BarrierResult(res.trigger_ns, res.compensation_ns, residual,
+                             residual <= tolerance_ns)
+
+    def run_expval_tasks(self, tapes: Sequence[Tape], J: float,
+                         h: float) -> list[TaskResult]:
+        """Scatter expval waveforms, gather energies (VQE inner loop)."""
+        return self.run_tasks(tapes, shots=0, expval=(J, h))
+
+    # --- collective task execution (Bcast/Scatter/Gather composition) ------------
+    def run_tasks(self, tapes: Sequence[Tape], shots: int,
+                  ledger_path: str | None = None,
+                  straggler_factor: float = 3.0,
+                  min_deadline_s: float = 2.0,
+                  expval: tuple | None = None) -> list[TaskResult]:
+        """Scatter tapes over MonitorProcesses, gather results.
+
+        Fault-tolerant: node death requeues its task; stragglers are
+        duplicate-dispatched once a deadline (straggler_factor x the running
+        median round-trip) passes.  With a ledger, completed tasks survive
+        controller restarts.
+        """
+        n_tasks = len(tapes)
+        results: dict[int, TaskResult] = {}
+        ledger = _Ledger(ledger_path) if ledger_path else None
+        if ledger:
+            for tid, r in ledger.load().items():
+                if tid < n_tasks:
+                    results[tid] = r
+
+        pending = [t for t in range(n_tasks) if t not in results]
+        done_evt = threading.Event()
+        lock = threading.Lock()
+        inflight: dict[int, float] = {}   # task_id -> dispatch time
+        free_nodes = [q for q in self.alive_qranks()]
+        walls: list[float] = []
+
+        def dispatch(tid: int, qrank: int):
+            def work():
+                try:
+                    r = self.mpiq_send(qrank, tapes[tid], shots, tag=tid,
+                                       expval=expval)
+                except NodeDied:
+                    with lock:
+                        inflight.pop(tid, None)
+                        if tid not in results:
+                            pending.append(tid)
+                        done_evt.set()
+                    return
+                except RuntimeError:
+                    with lock:
+                        inflight.pop(tid, None)
+                        free_nodes.append(qrank)
+                        if tid not in results:
+                            pending.append(tid)
+                        done_evt.set()
+                    return
+                with lock:
+                    inflight.pop(tid, None)
+                    if tid not in results:   # first result wins
+                        results[tid] = r
+                        walls.append(r.wall_ns / 1e9)
+                        if ledger:
+                            ledger.store(tid, r)
+                    free_nodes.append(qrank)
+                    done_evt.set()
+            threading.Thread(target=work, daemon=True).start()
+
+        deadline_at = time.monotonic() + self.timeout * max(1, n_tasks)
+        while True:
+            with lock:
+                # schedule
+                while pending and free_nodes:
+                    tid = pending.pop(0)
+                    q = free_nodes.pop(0)
+                    inflight[tid] = time.monotonic()
+                    dispatch(tid, q)
+                # straggler duplicate-dispatch
+                if free_nodes and inflight and walls:
+                    med = float(np.median(walls))
+                    deadline = max(min_deadline_s, straggler_factor * med)
+                    now = time.monotonic()
+                    for tid, t0 in list(inflight.items()):
+                        if now - t0 > deadline and free_nodes:
+                            q = free_nodes.pop(0)
+                            inflight[tid] = now
+                            dispatch(tid, q)
+                finished = len(results) >= n_tasks
+                no_capacity = (not self.alive_qranks())
+            if finished:
+                break
+            if no_capacity:
+                raise NodeDied("all MonitorProcesses are dead")
+            if time.monotonic() > deadline_at:
+                raise TimeoutError(f"{n_tasks - len(results)} tasks unfinished")
+            done_evt.wait(0.05)
+            done_evt.clear()
+        return [results[t] for t in range(n_tasks)]
+
+    def shutdown(self) -> None:
+        for q, conn in list(self.conns.items()):
+            try:
+                pr.send_frame(conn.sock, pr.Frame(
+                    pr.SHUTDOWN, self.context_id, 0, pr.CONTROLLER, q))
+            except OSError:
+                pass
+            conn.close()
+        self.conns.clear()
+
+
+class _Ledger:
+    """Append-only task checkpoint: JSON index + one .npy per task."""
+
+    def __init__(self, path: str):
+        self.dir = path
+        os.makedirs(path, exist_ok=True)
+        self.index = os.path.join(path, "ledger.json")
+
+    def load(self) -> dict[int, TaskResult]:
+        if not os.path.exists(self.index):
+            return {}
+        with open(self.index) as f:
+            idx = json.load(f)
+        out = {}
+        for tid_s, meta in idx.items():
+            tid = int(tid_s)
+            samples = np.load(os.path.join(self.dir, meta["file"]))
+            out[tid] = TaskResult(tid, meta["qrank"], meta["exec_ns"],
+                                  meta["wall_ns"], samples)
+        return out
+
+    def store(self, tid: int, r: TaskResult) -> None:
+        fname = f"task{tid}.npy"
+        np.save(os.path.join(self.dir, fname), r.samples)
+        idx = {}
+        if os.path.exists(self.index):
+            with open(self.index) as f:
+                idx = json.load(f)
+        idx[str(tid)] = {"file": fname, "qrank": r.qrank,
+                         "exec_ns": r.exec_ns, "wall_ns": r.wall_ns}
+        tmp = self.index + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(idx, f)
+        os.replace(tmp, self.index)

@@ -1,0 +1,109 @@
+"""Local cluster launcher: spawns MonitorProcess daemons as OS processes.
+
+Each simulated quantum node is a separate Python process listening on
+127.0.0.1:(base_port + device_id) — the `{IP, device_id}` fixed binding of
+the hybrid communication domain, with the port derived deterministically
+from device_id.  On a real deployment the same controller code points at
+remote IPs; nothing in the protocol assumes locality.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from .controller import Controller, Endpoint
+
+_SRC_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+# Each LocalCluster in this process gets a disjoint port window; otherwise a
+# second cluster could silently talk to the first one's monitors.
+_PORT_WINDOW = 128
+_window_counter = 0
+
+
+def _next_base_port() -> int:
+    global _window_counter
+    base = 50000 + (os.getpid() % 211) * 37 + _window_counter * _PORT_WINDOW
+    _window_counter += 1
+    return 20000 + (base % 40000)
+
+
+def _wait_listening(ip: str, port: int, timeout: float = 60.0) -> None:
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        try:
+            with socket.create_connection((ip, port), timeout=1.0):
+                return
+        except OSError:
+            time.sleep(0.1)
+    raise TimeoutError(f"monitor at {ip}:{port} never came up")
+
+
+class LocalCluster:
+    """Context manager owning N MonitorProcess children + a Controller."""
+
+    def __init__(self, n_nodes: int, base_port: int | None = None,
+                 clock_seed: int = 0, skew_scale_ns: float = 500.0,
+                 slowdowns: dict[int, float] | None = None,
+                 context_id: int = 1, timeout: float = 120.0):
+        self.n_nodes = n_nodes
+        self.base_port = base_port or _next_base_port()
+        self.slowdowns = slowdowns or {}
+        rng = np.random.default_rng(clock_seed)
+        self.skews = rng.normal(0.0, skew_scale_ns, n_nodes)
+        self.context_id = context_id
+        self.timeout = timeout
+        self.procs: dict[int, subprocess.Popen] = {}
+        self.controller: Controller | None = None
+
+    def endpoint(self, device_id: int) -> Endpoint:
+        return Endpoint("127.0.0.1", self.base_port + device_id, device_id)
+
+    def spawn_node(self, device_id: int) -> Endpoint:
+        ep = self.endpoint(device_id)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = _SRC_ROOT + os.pathsep + env.get("PYTHONPATH", "")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        args = [sys.executable, "-m", "repro.runtime.monitor",
+                "--ip", ep.ip, "--port", str(ep.port),
+                "--device-id", str(device_id),
+                "--clock-skew-ns", str(float(self.skews[device_id % len(self.skews)])),
+                "--slowdown", str(self.slowdowns.get(device_id, 1.0)),
+                "--seed", str(device_id)]
+        self.procs[device_id] = subprocess.Popen(
+            args, env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+        return ep
+
+    def kill_node(self, device_id: int) -> None:
+        """Hard-kill a monitor (fault-injection for tests/benchmarks)."""
+        p = self.procs.pop(device_id, None)
+        if p is not None:
+            p.kill()
+            p.wait()
+
+    def __enter__(self) -> "LocalCluster":
+        eps = [self.spawn_node(i) for i in range(self.n_nodes)]
+        for ep in eps:
+            _wait_listening(ep.ip, ep.port)
+        self.controller = Controller(eps, context_id=self.context_id,
+                                     timeout=self.timeout)
+        self.controller.mpiq_init()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self.controller is not None:
+            try:
+                self.controller.shutdown()
+            except Exception:
+                pass
+        for did, p in list(self.procs.items()):
+            try:
+                p.wait(timeout=5)
+            except subprocess.TimeoutExpired:
+                p.kill()
+        self.procs.clear()

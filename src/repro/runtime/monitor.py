@@ -1,0 +1,160 @@
+"""Quantum MonitorProcess (paper §3.2): the per-node daemon that owns the
+local quantum control system + QPU and executes device-ready waveform
+payloads with no secondary compilation.
+
+Design notes
+  * One TCP listener per `{IP, device_id}` binding; frames per protocol.py.
+  * Execution engine: the retrace-free tape interpreter
+    (quantum/statevector.run_tape) — it is AOT-shaped, so the first TASK of
+    a given (n_qubits, tape_len) shape compiles once and every subsequent
+    waveform of that shape executes immediately: the lightweight
+    communication architecture's "no compile at the target" property.
+  * The node's hardware clock is modeled by (skew_ns, compensation_ns)
+    registers manipulated by CLOCK_PROBE / CLOCK_SET frames (§3.3).
+  * `slowdown` injects a deterministic straggler factor (for fault-tolerance
+    tests and straggler-mitigation benchmarks).
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+
+from . import protocol as pr
+
+
+class MonitorProcess:
+    def __init__(self, ip: str, port: int, device_id: int,
+                 clock_skew_ns: float = 0.0, slowdown: float = 1.0,
+                 seed: int = 0):
+        self.ip, self.port, self.device_id = ip, port, device_id
+        self.clock_skew_ns = float(clock_skew_ns)
+        self.compensation_ns = 0.0
+        self.slowdown = float(slowdown)
+        self.seed = seed
+        self.contexts: set[int] = set()
+        self._stop = threading.Event()
+        self._sock: socket.socket | None = None
+
+    EXPVAL = 0xFFFFFFFF   # shots sentinel: task returns <H_TFIM> instead
+
+    # --- waveform execution -------------------------------------------------
+    def _execute(self, payload: bytes, tag: int) -> bytes:
+        """payload = <u32 shots> [<d J> <d h> if shots==EXPVAL] <Tape bytes>.
+        Returns <u64 exec_ns> <u32 n> <i64 samples[n]>, or for expval tasks
+        <u64 exec_ns> <u32 EXPVAL> <d energy>."""
+        import jax  # local import: keep the listener importable without jax
+        from repro.quantum import statevector as sv
+        from repro.quantum.tape import Tape
+
+        (shots,) = struct.unpack_from("<I", payload, 0)
+        if shots == self.EXPVAL:
+            J, h = struct.unpack_from("<dd", payload, 4)
+            tape = Tape.from_bytes(payload[20:])
+            from repro.quantum.vqe import tfim_expectation
+            t0 = time.perf_counter_ns()
+            psi = sv.run_tape(sv.init_state(tape.n_qubits), tape)
+            energy = tfim_expectation(psi, tape.n_qubits, J, h)
+            exec_ns = time.perf_counter_ns() - t0
+            return struct.pack("<QId", exec_ns, self.EXPVAL, energy)
+        tape = Tape.from_bytes(payload[4:])
+        t0 = time.perf_counter_ns()
+        psi = sv.run_tape(sv.init_state(tape.n_qubits), tape)
+        key = jax.random.PRNGKey(self.seed ^ (tag * 2654435761 % (1 << 31)))
+        samples = np.asarray(sv.sample_bitstrings(psi, shots, key))
+        jax.block_until_ready(samples)
+        exec_ns = time.perf_counter_ns() - t0
+        if self.slowdown > 1.0:
+            time.sleep(exec_ns * (self.slowdown - 1.0) / 1e9)
+            exec_ns = int(exec_ns * self.slowdown)
+        return (struct.pack("<QI", exec_ns, len(samples))
+                + samples.astype("<i8").tobytes())
+
+    # --- frame dispatch -------------------------------------------------------
+    def _handle(self, frame: pr.Frame, conn: socket.socket) -> bool:
+        """Returns False when the connection should close."""
+        reply = lambda mtype, payload=b"": pr.send_frame(
+            conn, pr.Frame(mtype, frame.context_id, frame.tag,
+                           self.device_id, frame.src, payload))
+        if frame.msg_type == pr.HELLO:
+            self.contexts.add(frame.context_id)
+            reply(pr.HELLO_ACK, struct.pack("<i", self.device_id))
+            return True
+        if frame.context_id not in self.contexts:
+            reply(pr.ERROR, b"unknown communication context")
+            return True
+        if frame.msg_type == pr.TASK:
+            try:
+                reply(pr.RESULT, self._execute(frame.payload, frame.tag))
+            except Exception as e:  # report, don't die
+                reply(pr.ERROR, str(e).encode())
+            return True
+        if frame.msg_type == pr.CLOCK_PROBE:
+            reply(pr.CLOCK_VALUE, struct.pack("<d", self.clock_skew_ns))
+            return True
+        if frame.msg_type == pr.CLOCK_SET:
+            (self.compensation_ns,) = struct.unpack("<d", frame.payload)
+            reply(pr.CLOCK_SET_ACK,
+                  struct.pack("<d", self.clock_skew_ns + self.compensation_ns))
+            return True
+        if frame.msg_type == pr.BARRIER:
+            reply(pr.BARRIER_ACK)
+            return True
+        if frame.msg_type == pr.PING:
+            reply(pr.PONG)
+            return True
+        if frame.msg_type == pr.LEAVE:
+            self.contexts.discard(frame.context_id)
+            return True
+        if frame.msg_type == pr.SHUTDOWN:
+            self._stop.set()
+            return False
+        reply(pr.ERROR, f"bad msg_type {frame.msg_type}".encode())
+        return True
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            with conn:
+                while not self._stop.is_set():
+                    if not self._handle(pr.recv_frame(conn), conn):
+                        break
+        except (ConnectionError, OSError):
+            pass
+
+    def serve_forever(self) -> None:
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((self.ip, self.port))
+        self._sock.listen(16)
+        self._sock.settimeout(0.25)
+        try:
+            while not self._stop.is_set():
+                try:
+                    conn, _ = self._sock.accept()
+                except socket.timeout:
+                    continue
+                threading.Thread(target=self._serve_conn, args=(conn,),
+                                 daemon=True).start()
+        finally:
+            self._sock.close()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="MPI-Q quantum MonitorProcess")
+    ap.add_argument("--ip", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--device-id", type=int, required=True)
+    ap.add_argument("--clock-skew-ns", type=float, default=0.0)
+    ap.add_argument("--slowdown", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args(argv)
+    MonitorProcess(a.ip, a.port, a.device_id, a.clock_skew_ns, a.slowdown,
+                   a.seed).serve_forever()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""MPI-Q wire protocol: length-prefixed binary framing over TCP.
+
+Every frame is
+
+    <4s magic 'MPIQ'> <u16 version> <u16 msg_type> <i32 context_id>
+    <i32 tag> <i32 src> <i32 dst> <i64 payload_len> payload...
+
+`context_id` carries the hybrid-communication-domain isolation tag (paper
+§3.1): a MonitorProcess rejects frames whose context does not match an
+attached domain, preventing cross-domain message confusion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import struct
+
+MAGIC = b"MPIQ"
+VERSION = 1
+
+_HEADER = struct.Struct("<4sHHiiiiq")
+HEADER_SIZE = _HEADER.size
+
+# message types
+HELLO = 1          # controller -> monitor: attach to a domain (payload: ctx info)
+HELLO_ACK = 2
+TASK = 3           # waveform payload -> monitor (payload: shots u32 + Tape bytes)
+RESULT = 4         # monitor -> controller (payload: exec_ns u64 + samples i64[])
+BARRIER = 5        # barrier begin (QQ tier: payload carries trigger info)
+BARRIER_ACK = 6
+CLOCK_PROBE = 7    # controller asks for the node's clock-skew register
+CLOCK_VALUE = 8    # monitor reply: f64 skew_ns
+CLOCK_SET = 9      # controller sends compensation delay: f64 comp_ns
+CLOCK_SET_ACK = 10
+PING = 11          # heartbeat
+PONG = 12
+LEAVE = 13         # graceful detach
+SHUTDOWN = 14      # stop the monitor process
+ERROR = 15
+CANCEL = 16        # abandon the in-flight task (straggler mitigation)
+
+ANY_SOURCE = -1
+CONTROLLER = -2
+
+
+class ProtocolError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    msg_type: int
+    context_id: int
+    tag: int
+    src: int
+    dst: int
+    payload: bytes = b""
+
+
+def pack_frame(f: Frame) -> bytes:
+    head = _HEADER.pack(MAGIC, VERSION, f.msg_type, f.context_id, f.tag,
+                        f.src, f.dst, len(f.payload))
+    return head + f.payload
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def send_frame(sock: socket.socket, f: Frame) -> None:
+    sock.sendall(pack_frame(f))
+
+
+def recv_frame(sock: socket.socket) -> Frame:
+    head = _recv_exact(sock, HEADER_SIZE)
+    magic, ver, mtype, ctx, tag, src, dst, plen = _HEADER.unpack(head)
+    if magic != MAGIC:
+        raise ProtocolError("bad magic")
+    if ver != VERSION:
+        raise ProtocolError(f"bad version {ver}")
+    if plen < 0 or plen > (1 << 33):
+        raise ProtocolError(f"absurd payload length {plen}")
+    payload = _recv_exact(sock, plen) if plen else b""
+    return Frame(mtype, ctx, tag, src, dst, payload)

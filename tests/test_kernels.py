@@ -1,0 +1,172 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.apply_gate import apply_gate_pallas
+from repro.kernels.fused_local import fused_gates_pallas, tape_to_gate_list
+from repro.quantum import gates, ghz, statevector as sv
+from repro.quantum.tape import CircuitBuilder
+
+from hypothesis import given, settings, strategies as st
+
+
+def _rand_state(nq, seed=0):
+    rng = np.random.default_rng(seed)
+    psi = rng.normal(size=2**nq) + 1j * rng.normal(size=2**nq)
+    return jnp.asarray((psi / np.linalg.norm(psi)).astype(np.complex64))
+
+
+# --------------------------------------------------------------------------
+# apply_gate: every qubit position x several gates x state sizes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nq", [3, 6, 10, 12])
+def test_apply_gate_sweep(nq):
+    psi = _rand_state(nq, seed=nq)
+    for q in range(nq):
+        for op, theta in [(gates.H, 0.0), (gates.RZ, 1.3), (gates.RY, 0.4),
+                          (gates.X, 0.0)]:
+            mat = gates.gate_matrix_np(op, theta)
+            got = apply_gate_pallas(psi, mat, q)
+            want = ref.apply_gate_ref(psi, mat, q)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=3e-6)
+
+
+@given(st.integers(2, 9), st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_apply_gate_unitary_preserves_norm(nq, seed):
+    psi = _rand_state(nq, seed=seed % 1000)
+    q = seed % nq
+    got = apply_gate_pallas(psi, gates.gate_matrix_np(gates.H), q)
+    assert abs(float(jnp.linalg.norm(got)) - 1.0) < 1e-5
+
+
+# --------------------------------------------------------------------------
+# fused_local: GHZ ladders + random circuits incl. out-of-tile controls
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [4, 7, 9])
+def test_fused_ghz_ladder(n):
+    tape = ghz.build_ghz_tape(n)
+    got = fused_gates_pallas(sv.init_state(n), tape_to_gate_list(tape))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ghz.ghz_statevector(n)), atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fused_random_circuit_high_controls(seed):
+    rng = np.random.default_rng(seed)
+    b = CircuitBuilder(12)
+    for _ in range(40):
+        k = rng.integers(0, 4)
+        q = int(rng.integers(0, 9))          # targets stay in-lane
+        if k == 0: b.h(q)
+        elif k == 1: b.ry(q, float(rng.uniform(0, 6)))
+        else:
+            c = int(rng.integers(0, 12))     # controls may be out-of-tile
+            if c != q:
+                (b.cx if k == 2 else b.cz)(c, q)
+    tape = b.build()
+    got = fused_gates_pallas(sv.init_state(12), tape_to_gate_list(tape))
+    want = ref.fused_gates_ref(sv.init_state(12), tape_to_gate_list(tape))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fused_rejects_out_of_lane_target():
+    with pytest.raises(ValueError):
+        fused_gates_pallas(sv.init_state(12),
+                           [(gates.gate_matrix_np(gates.H), 11, -1)])
+
+
+# --------------------------------------------------------------------------
+# flash attention: shape/dtype/GQA sweep
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 4, 2, 256, 64),
+    (2, 8, 2, 128, 128),
+    (1, 2, 2, 512, 64),
+    (1, 8, 1, 128, 64),    # MQA
+    (1, 4, 4, 384, 64),    # MHA, non-pow2 block count
+])
+def test_flash_attention_sweep(B, Hq, Hkv, S, D):
+    rng = np.random.default_rng(B * 100 + S)
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+def test_flash_attention_block_shape_invariance():
+    """Output must not depend on the (block_q, block_k) tiling choice."""
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 512, 64)), jnp.float32)
+    a = ops.flash_attention(q, k, v, block_q=128, block_k=128)
+    b = ops.flash_attention(q, k, v, block_q=256, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# SSD scan: shape/chunk sweep + chunk invariance
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Bt,L,H,P,N,chunk", [
+    (1, 128, 2, 32, 16, 64),
+    (2, 256, 4, 64, 32, 128),
+    (1, 512, 1, 128, 128, 128),
+    (1, 256, 3, 64, 64, 256),   # single chunk
+])
+def test_ssd_scan_sweep(Bt, L, H, P, N, chunk):
+    rng = np.random.default_rng(L + H)
+    x = jnp.asarray(rng.normal(size=(Bt, L, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(Bt, L, H)).astype(np.float32))
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(Bt, L, N)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(Bt, L, N)).astype(np.float32))
+    got = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    want = ref.ssd_scan_ref(x, dt, A, B, C)
+    rel = float(jnp.max(jnp.abs(got - want))) / float(jnp.max(jnp.abs(want)))
+    assert rel < 1e-4
+
+
+def test_ssd_chunk_invariance():
+    """The chunked dual form must agree with itself across chunk sizes."""
+    rng = np.random.default_rng(21)
+    x = jnp.asarray(rng.normal(size=(1, 256, 2, 32)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(1, 256, 2)).astype(np.float32))
+    A = jnp.asarray(np.array([-1.0, -0.3], np.float32))
+    B = jnp.asarray(rng.normal(size=(1, 256, 16)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(1, 256, 16)).astype(np.float32))
+    a = ops.ssd_scan(x, dt, A, B, C, chunk=64)
+    b = ops.ssd_scan(x, dt, A, B, C, chunk=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,0 +1,109 @@
+"""Launch layer: HLO analyzer, shapes/rules resolution, small-mesh dry-run."""
+import numpy as np
+import pytest
+
+from repro.configs import list_archs, get_config
+from repro.launch.hloanalysis import analyze_hlo, _shape_bytes
+from repro.launch.shapes import SHAPES, cell_applicable
+from repro.parallel.sharding import rules_by_name
+
+
+# --------------------------------------------------------------------------
+# HLO analyzer on a hand-written module (exact expectations)
+# --------------------------------------------------------------------------
+
+_TOY_HLO = """
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%y), replica_groups={}
+  %one = s32[] constant(1)
+  %j = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%j, %ar)
+}
+
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[8,16]) tuple(%z, %a)
+  %w5 = (s32[], f32[8,16]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w5), index=1
+}
+"""
+
+
+def test_analyzer_counts_while_trips():
+    s = analyze_hlo(_TOY_HLO)
+    # dot: 2*8*16*16 flops, x5 trips
+    assert s.flops == pytest.approx(5 * 2 * 8 * 16 * 16)
+    # all-reduce: 2*out_bytes, x5
+    assert s.collective_bytes["all-reduce"] == pytest.approx(
+        5 * 2 * 8 * 16 * 4)
+    assert s.n_collectives == 5
+
+
+def test_analyzer_tuple_shapes_with_comments():
+    txt = _TOY_HLO.replace("(s32[], f32[8,16]) while",
+                           "(s32[], /*index=1*/f32[8,16]) while")
+    s = analyze_hlo(txt)
+    assert s.flops == pytest.approx(5 * 2 * 8 * 16 * 16)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(s32[], f32[4])") == 4 + 16
+    assert _shape_bytes("pred[]") == 1
+
+
+# --------------------------------------------------------------------------
+# cells / rules
+# --------------------------------------------------------------------------
+
+def test_40_cells_defined():
+    cells = [(a, s) for a in list_archs() for s in SHAPES]
+    assert len(cells) == 40
+    runs = [c for c in cells if cell_applicable(*c)[0]]
+    skips = [c for c in cells if not cell_applicable(*c)[0]]
+    assert len(runs) == 32
+    # exactly the 8 full-attention long_500k cells are skipped
+    assert all(s == "long_500k" for _, s in skips)
+    assert {"mamba2-780m", "jamba-1.5-large-398b"} == {
+        a for a, s in runs if s == "long_500k"}
+
+
+def test_rule_tables_resolve_for_all_archs():
+    from repro.models import params as MP, transformer as T
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for rn in ("dp_tp", "fsdp_tp", "fsdp_tp_sp"):
+            rules = rules_by_name(rn)
+            specs = MP.param_specs(T.model_defs(cfg), rules)
+            assert specs  # every logical axis must be known to the table
+
+
+def test_dryrun_results_if_present():
+    """When the dry-run artifacts exist, every applicable cell must have
+    compiled (no errors) on both meshes."""
+    import json, os
+    for path, mesh in (("results/dryrun_single.json", "16x16"),
+                       ("results/dryrun_multi.json", "2x16x16")):
+        if not os.path.exists(path):
+            pytest.skip("dry-run artifacts not present")
+        recs = json.load(open(path))
+        if len(recs) < 40:
+            pytest.skip(f"{path}: sweep still in progress ({len(recs)} recs)")
+        errs = [r for r in recs if "error" in r]
+        assert not errs, errs[:2]
+        ok = {(r["arch"], r["shape"]) for r in recs if "roofline" in r}
+        assert len(ok) == 32, f"{mesh}: {len(ok)} cells compiled"

@@ -1,0 +1,165 @@
+"""Quantum substrate: simulator correctness, tape IR, circuit cutting."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.quantum import cutting, gates, ghz, statevector as sv
+from repro.quantum.tape import CircuitBuilder, Tape
+
+from hypothesis import given, settings, strategies as st
+
+
+# --------------------------------------------------------------------------
+# statevector basics
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 3, 6, 10])
+def test_ghz_matches_analytic(n):
+    psi = sv.simulate_tape(ghz.build_ghz_tape(n))
+    np.testing.assert_allclose(np.asarray(psi),
+                               np.asarray(ghz.ghz_statevector(n)), atol=1e-6)
+
+
+def test_interpreter_matches_unrolled_on_random_circuit():
+    rng = np.random.default_rng(42)
+    b = CircuitBuilder(7)
+    for _ in range(60):
+        choice = rng.integers(0, 7)
+        q = int(rng.integers(0, 7))
+        if choice == 0: b.h(q)
+        elif choice == 1: b.rx(q, float(rng.uniform(0, 2 * np.pi)))
+        elif choice == 2: b.ry(q, float(rng.uniform(0, 2 * np.pi)))
+        elif choice == 3: b.rz(q, float(rng.uniform(0, 2 * np.pi)))
+        elif choice == 4: b.t(q)
+        else:
+            c = int(rng.integers(0, 7))
+            if c != q:
+                (b.cx if choice == 5 else b.cz)(c, q)
+    tape = b.build()
+    a = sv.simulate_tape(tape)
+    c = sv.run_tape_unrolled(sv.init_state(7), tape)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
+
+
+def test_tape_padding_is_noop():
+    t = ghz.build_ghz_tape(5)
+    np.testing.assert_allclose(
+        np.asarray(sv.simulate_tape(t)),
+        np.asarray(sv.simulate_tape(t.padded(32))), atol=1e-6)
+
+
+def test_expvals():
+    psi = sv.simulate_tape(ghz.build_ghz_tape(4))
+    assert abs(float(sv.expval_z_string(psi)) - 1.0) < 1e-6  # even n
+    assert abs(float(sv.expval_pauli_z(psi, 0))) < 1e-6
+
+
+def test_sampling_distribution():
+    psi = sv.simulate_tape(ghz.build_ghz_tape(6))
+    s = np.asarray(sv.sample_bitstrings(psi, 4000, jax.random.PRNGKey(0)))
+    assert set(np.unique(s)) <= {0, 63}
+    frac = (s == 63).mean()
+    assert 0.4 < frac < 0.6
+
+
+# --------------------------------------------------------------------------
+# hypothesis: system invariants
+# --------------------------------------------------------------------------
+
+@st.composite
+def random_tape(draw, max_qubits=6, max_ops=24):
+    n = draw(st.integers(2, max_qubits))
+    ops = draw(st.lists(st.tuples(
+        st.integers(0, 5),                 # gate choice
+        st.integers(0, max_qubits - 1),    # q
+        st.integers(0, max_qubits - 1),    # c
+        st.floats(0, 6.25, allow_nan=False, width=32)), max_size=max_ops))
+    b = CircuitBuilder(n)
+    for choice, q, c, theta in ops:
+        q, c = q % n, c % n
+        if choice == 0: b.h(q)
+        elif choice == 1: b.x(q)
+        elif choice == 2: b.rz(q, theta)
+        elif choice == 3: b.ry(q, theta)
+        elif choice == 4 and c != q: b.cx(c, q)
+        elif choice == 5 and c != q: b.cz(c, q)
+    return b.build(min_len=1)
+
+
+@given(random_tape())
+@settings(max_examples=25, deadline=None)
+def test_norm_preserved(tape):
+    """Unitary evolution preserves the 2-norm for any tape."""
+    psi = sv.simulate_tape(tape)
+    assert abs(float(jnp.sum(sv.probabilities(psi))) - 1.0) < 1e-4
+
+
+@given(random_tape())
+@settings(max_examples=10, deadline=None)
+def test_wire_format_roundtrip(tape):
+    t2 = Tape.from_bytes(tape.to_bytes())
+    assert t2.n_qubits == tape.n_qubits
+    assert np.array_equal(t2.opcodes, tape.opcodes)
+    assert np.array_equal(t2.qubits, tape.qubits)
+    assert np.array_equal(t2.ctrls, tape.ctrls)
+    np.testing.assert_allclose(t2.params, tape.params)
+
+
+@given(st.integers(2, 16), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_equal_granularity_partition(n, m):
+    m = min(m, n)
+    sizes = cutting.equal_granularity_groups(n, m)
+    assert sum(sizes) == n
+    assert max(sizes) - min(sizes) <= 1
+
+
+# --------------------------------------------------------------------------
+# circuit cutting
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", [(8, 2), (9, 3), (12, 4)])
+def test_parallel_cut_reconstruction(n, m):
+    plan = cutting.cut_ghz_parallel(n, m)
+    assert sum(plan.group_sizes) == n
+    key = jax.random.PRNGKey(1)
+    samps = []
+    for tp in plan.tapes:
+        psi = sv.simulate_tape(tp)
+        key, sub = jax.random.split(key)
+        samps.append(np.asarray(sv.sample_bitstrings(psi, 300, sub)))
+    glob = cutting.reconstruct_ghz_samples(plan, samps)
+    assert set(np.unique(glob)) <= {0, 2**n - 1}
+    frac = (glob != 0).mean()
+    assert 0.35 < frac < 0.65
+
+
+def test_parallel_cut_rejects_non_ghz_samples():
+    plan = cutting.cut_ghz_parallel(8, 2)
+    bad = [np.array([1, 2]), np.array([0, 0])]   # 1,2 are not local GHZ outcomes
+    with pytest.raises(ValueError):
+        cutting.reconstruct_ghz_samples(plan, bad)
+
+
+def test_conditional_cut_exact_z_statistics():
+    out = cutting.cut_ghz_conditional(10, 3, 600, seed=3)
+    assert set(np.unique(out)) <= {0, 2**10 - 1}
+    frac = (out != 0).mean()
+    assert 0.4 < frac < 0.6
+
+
+@pytest.mark.parametrize("n,m", [(6, 2), (6, 3), (8, 4), (7, 3), (10, 5)])
+def test_quasiprob_wire_cut_expectations(n, m):
+    """Full Peng-style wire-cut reconstruction must match analytic GHZ values:
+    <Z^n> = 1 (even n) / 0 (odd n); <X^n> = 1."""
+    ez = cutting.chain_cut_expectation(n, m, "Z")
+    ex = cutting.chain_cut_expectation(n, m, "X")
+    assert abs(ez - (1.0 if n % 2 == 0 else 0.0)) < 1e-5
+    assert abs(ex - 1.0) < 1e-5
+
+
+def test_quasiprob_uncut_baseline():
+    assert abs(cutting.chain_cut_expectation(6, 1, "Z") - 1.0) < 1e-5
+    assert abs(cutting.chain_cut_expectation(6, 1, "X") - 1.0) < 1e-5

@@ -1,0 +1,166 @@
+"""Socket runtime: protocol framing, MonitorProcess RPC, fault tolerance."""
+import os
+import struct
+import time
+
+import numpy as np
+import pytest
+
+from repro.quantum import cutting
+from repro.quantum.tape import CircuitBuilder
+from repro.runtime import LocalCluster, NodeDied
+from repro.runtime import protocol as pr
+
+from hypothesis import given, settings, strategies as st
+
+
+# --------------------------------------------------------------------------
+# framing (no sockets needed)
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 16), st.integers(-2, 2**31 - 1), st.integers(0, 2**31 - 1),
+       st.binary(max_size=2048))
+@settings(max_examples=50, deadline=None)
+def test_frame_pack_header_roundtrip(mtype, src, ctx, payload):
+    f = pr.Frame(mtype, ctx, 7, src, 3, payload)
+    raw = pr.pack_frame(f)
+    import io, socket
+
+    class FakeSock:
+        def __init__(self, data): self.b = io.BytesIO(data)
+        def recv(self, n): return self.b.read(n)
+
+    g = pr.recv_frame(FakeSock(raw))
+    assert g == f
+
+
+def test_frame_rejects_bad_magic():
+    raw = b"XXXX" + b"\x00" * (pr.HEADER_SIZE - 4)
+    import io
+
+    class FakeSock:
+        def __init__(self, data): self.b = io.BytesIO(data)
+        def recv(self, n): return self.b.read(n)
+
+    with pytest.raises(pr.ProtocolError):
+        pr.recv_frame(FakeSock(raw))
+
+
+# --------------------------------------------------------------------------
+# live cluster (module-scoped: spawning jax subprocesses is expensive)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cluster():
+    with LocalCluster(3, clock_seed=11, timeout=180.0) as cl:
+        # warm the tape-interpreter compile cache on every node
+        plan = cutting.cut_ghz_parallel(6, 3)
+        cl.controller.run_tasks(plan.tapes, shots=8)
+        yield cl
+
+
+def test_heartbeats(cluster):
+    assert all(cluster.controller.ping(q) for q in range(3))
+
+
+def test_hybrid_barrier_qq(cluster):
+    res = cluster.controller.mpiq_barrier_qq()
+    assert res.within_tolerance
+    assert res.residual_ns <= 50.0
+
+
+def test_context_isolation(cluster):
+    """Frames from an unattached communication context are rejected."""
+    from repro.runtime.controller import _Conn
+    ep = cluster.endpoint(0)
+    rogue = _Conn(ep, context_id=999_999, timeout=10.0)
+    try:
+        reply = rogue.rpc(pr.TASK, b"\x00" * 8)
+        assert reply.msg_type == pr.ERROR
+        assert b"context" in reply.payload
+    finally:
+        rogue.close()
+
+
+def test_distributed_ghz_and_reconstruction(cluster):
+    plan = cutting.cut_ghz_parallel(18, 3)
+    results = cluster.controller.run_tasks(plan.tapes, shots=64)
+    assert [r.task_id for r in results] == [0, 1, 2]
+    glob = cutting.reconstruct_ghz_samples(plan, [r.samples for r in results])
+    assert set(np.unique(glob)) <= {0, 2**18 - 1}
+
+
+def test_retrace_free_execution_is_fast(cluster):
+    """Second wave of same-shape tapes must skip compilation entirely
+    (the lightweight-path property: no secondary compilation at the node)."""
+    plan = cutting.cut_ghz_parallel(18, 3)
+    t0 = time.perf_counter()
+    cluster.controller.run_tasks(plan.tapes, shots=16)
+    warm = time.perf_counter() - t0
+    assert warm < 5.0, f"warm wave took {warm:.1f}s — node recompiled?"
+
+
+def test_more_tasks_than_nodes(cluster):
+    plan = cutting.cut_ghz_parallel(30, 6)   # 6 tasks on 3 nodes
+    results = cluster.controller.run_tasks(plan.tapes, shots=16)
+    assert len(results) == 6
+    assert {r.qrank for r in results} <= {0, 1, 2}
+
+
+def test_ledger_checkpoint_restart(cluster, tmp_path):
+    plan = cutting.cut_ghz_parallel(12, 3)
+    ledger = str(tmp_path / "ledger")
+    r1 = cluster.controller.run_tasks(plan.tapes, shots=32, ledger_path=ledger)
+    # "restart": a fresh run with the same ledger must reuse stored results
+    t0 = time.perf_counter()
+    r2 = cluster.controller.run_tasks(plan.tapes, shots=32, ledger_path=ledger)
+    dt = time.perf_counter() - t0
+    assert dt < 1.0, "restart re-executed completed tasks"
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.samples, b.samples)
+
+
+def test_elastic_join_leave(cluster):
+    ep = cluster.spawn_node(7)   # device_id 7 -> new port
+    from repro.runtime.launcher import _wait_listening
+    _wait_listening(ep.ip, ep.port)
+    q = cluster.controller.add_node(ep)
+    assert cluster.controller.ping(q)
+    plan = cutting.cut_ghz_parallel(16, 4)
+    results = cluster.controller.run_tasks(plan.tapes, shots=16)
+    assert len(results) == 4
+    cluster.controller.remove_node(q)
+    cluster.kill_node(7)
+    assert q not in cluster.controller.conns
+
+
+def test_node_failure_redispatch():
+    """Kill a node mid-run: its tasks must be re-dispatched to survivors."""
+    with LocalCluster(3, clock_seed=2, timeout=180.0) as cl:
+        plan = cutting.cut_ghz_parallel(6, 3)
+        cl.controller.run_tasks(plan.tapes, shots=8)   # warm compile caches
+        cl.kill_node(1)
+        plan = cutting.cut_ghz_parallel(20, 5)          # 5 tasks, 2 live nodes
+        results = cl.controller.run_tasks(plan.tapes, shots=16)
+        assert len(results) == 5
+        assert {r.qrank for r in results} <= {0, 2}
+        glob = cutting.reconstruct_ghz_samples(plan, [r.samples for r in results])
+        assert set(np.unique(glob)) <= {0, 2**20 - 1}
+
+
+def test_straggler_duplicate_dispatch():
+    """A 30x-slow node must not dominate the wave: the task is duplicated to
+    a free fast node and the first result wins."""
+    with LocalCluster(3, clock_seed=4, slowdowns={2: 30.0},
+                      timeout=240.0) as cl:
+        plan = cutting.cut_ghz_parallel(6, 3)
+        cl.controller.run_tasks(plan.tapes, shots=8)   # warm
+        plan = cutting.cut_ghz_parallel(45, 3)         # 15q subcircuits
+        t0 = time.perf_counter()
+        results = cl.controller.run_tasks(
+            plan.tapes, shots=16, straggler_factor=2.0, min_deadline_s=1.0)
+        dt = time.perf_counter() - t0
+        assert len(results) == 3
+        # the straggler's share must have been completed by someone
+        glob = cutting.reconstruct_ghz_samples(plan, [r.samples for r in results])
+        assert set(np.unique(glob)) <= {0, 2**45 - 1}

@@ -1,0 +1,85 @@
+"""Hybrid variational optimization (paper §4.3 use case)."""
+import numpy as np
+import pytest
+
+from repro.quantum import vqe
+from repro.quantum import statevector as sv
+
+from hypothesis import given, settings, strategies as st
+
+
+def test_ansatz_param_count():
+    tape, mask = vqe.make_ansatz(5, 3)
+    assert int(mask.sum()) == 3 * 2 * 5        # RY+RZ per qubit per layer
+    assert tape.n_gates == 3 * 3 * 5           # + CNOT ring
+
+
+def test_tfim_expectation_analytic_states():
+    # |0...0>: <Z_i Z_j> = 1, <X_i> = 0  =>  E = -J*n
+    n = 4
+    psi = sv.init_state(n)
+    assert abs(vqe.tfim_expectation(psi, n, J=1.0, h=0.7) - (-4.0)) < 1e-6
+    # |+...+>: <ZZ> = 0, <X_i> = 1  =>  E = -h*n
+    from repro.quantum.tape import CircuitBuilder
+    b = CircuitBuilder(n)
+    for q in range(n):
+        b.h(q)
+    plus = sv.simulate_tape(b.build())
+    assert abs(vqe.tfim_expectation(plus, n, J=1.0, h=0.7) - (-2.8)) < 1e-5
+
+
+def test_exact_ground_energy_matches_known():
+    # TFIM ring at J=h=1: E0/n -> -4/pi in the thermodynamic limit;
+    # for n=4 the exact value is about -5.226
+    e = vqe.tfim_exact_ground(4, 1.0, 1.0)
+    assert -5.3 < e < -5.1
+
+
+def test_parameter_shift_matches_finite_difference():
+    tape, mask = vqe.make_ansatz(3, 1)
+    rng = np.random.default_rng(0)
+    theta = rng.normal(0, 0.3, int(mask.sum()))
+    energies = [vqe.energy_of(tape, mask, t, 1.0, 1.0)
+                for t in vqe.shift_jobs(theta)]
+    g_shift = vqe.grad_from_energies(energies)
+    eps = 1e-3   # f32 simulator: smaller eps is FD-noise dominated
+    g_fd = np.zeros_like(theta)
+    for j in range(len(theta)):
+        tp, tm = theta.copy(), theta.copy()
+        tp[j] += eps
+        tm[j] -= eps
+        g_fd[j] = (vqe.energy_of(tape, mask, tp, 1.0, 1.0)
+                   - vqe.energy_of(tape, mask, tm, 1.0, 1.0)) / (2 * eps)
+    np.testing.assert_allclose(g_shift, g_fd, atol=2e-3)
+
+
+def test_vqe_local_descends():
+    theta, hist = vqe.run_vqe_local(n_qubits=4, n_layers=2, steps=15, lr=0.15)
+    assert hist[-1] < hist[0] - 0.3
+    assert hist[-1] > vqe.tfim_exact_ground(4) - 1e-6   # variational bound
+
+
+@given(st.integers(2, 5), st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_energy_respects_variational_bound(n, layers):
+    tape, mask = vqe.make_ansatz(n, layers)
+    rng = np.random.default_rng(n * 10 + layers)
+    theta = rng.normal(0, 0.5, int(mask.sum()))
+    e = vqe.energy_of(tape, mask, theta, 1.0, 1.0)
+    assert e >= vqe.tfim_exact_ground(n) - 1e-6
+
+
+def test_vqe_distributed_over_cluster():
+    from repro.runtime import LocalCluster
+    with LocalCluster(2, clock_seed=3) as cl:
+        theta, hist = vqe.run_vqe_distributed(
+            cl.controller, n_qubits=3, n_layers=1, steps=4, lr=0.2)
+        assert hist[-1] <= hist[0] + 1e-9
+        # distributed energies == local energies for the same parameters
+        tape, mask = vqe.make_ansatz(3, 1)
+        jobs = vqe.shift_jobs(theta)[:4]
+        tapes = [vqe.with_params(tape, mask, t) for t in jobs]
+        rs = cl.controller.run_expval_tasks(tapes, J=1.0, h=1.0)
+        for r, t in zip(rs, jobs):
+            local = vqe.energy_of(tape, mask, t, 1.0, 1.0)
+            assert abs(r.energy - local) < 1e-5
